@@ -1,0 +1,51 @@
+"""Paper Table 1: compression time + size reduction vs number of
+compressed layers (linear scaling), plus the beyond-paper randomized-SVD
+speedup on paper-scale weight shapes."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.core.compress import compress_weight
+from repro.data.tokens import SyntheticLM
+from repro.zoo import data_config, get_trained_repro
+
+
+def run(quick=True):
+    rows = []
+    params, cfg = get_trained_repro(quick=quick)
+    ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [ds.batch_at(0)])
+
+    layer_counts = (1, 2, 3) if quick else (1, 2, 3, 4, 5, 6)
+    for n in layer_counts:
+        ccfg = CURConfig(r_max=64, n_compress_layers=n)
+        t0 = time.perf_counter()
+        _, _, info = compress_model(params, cfg, ccfg, calib)
+        dt = time.perf_counter() - t0
+        mb = info.params_saved * 4 / 2**20
+        rows.append((f"table1/compress_{n}_layers", dt * 1e6,
+                     f"saved={mb:.2f}MiB weights={len(info.weights)}"))
+
+    # exact vs randomized SVD at paper-scale shape (llama gate: 4096x14336
+    # scaled down 4x for CPU wall-time sanity)
+    m, n_ = (512, 1792) if quick else (1024, 3584)
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (m, n_), jnp.float32)
+    act = np.ones(m, np.float32)
+    for svd in ("exact", "randomized"):
+        ccfg = CURConfig(r_max=64, svd=svd)
+        t0 = time.perf_counter()
+        _, info = compress_weight(W, "w_gate", 0, ccfg, act, key)
+        dt = time.perf_counter() - t0
+        rows.append((f"table1/svd_{svd}_{m}x{n_}", dt * 1e6,
+                     f"relerr={info.fro_err/info.fro_w:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=False))

@@ -1,0 +1,86 @@
+"""Paper Fig. 6 + Fig. 7 (UUID task): adaptation-vs-forgetting trade-off.
+Fine-tune on a NEW synthetic task while tracking original-corpus ppl:
+CURing dU vs LoRA vs MoRA vs CURLoRA at equal budget. The "UUID" analogue
+is a random token-mapping task the model has never seen."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CURConfig, OptimizerConfig
+from repro.core import calibrate, compress_model
+from repro.core.heal import combine_params, partition_params, trainable_mask
+from repro.core.peft import count_trainable, wrap_model
+from repro.data.tokens import SyntheticLM
+from repro.models.model import loss_fn
+from repro.optim.adamw import AdamW
+from repro.train.evaluate import perplexity
+from repro.zoo import data_config, eval_batches, get_trained_repro
+
+R = 32
+
+
+def uuid_task_batch(cfg, step, pairs=64, seed=4242):
+    """Random source->target token-mapping pairs (Fig. 7 analogue):
+    sequence = [src tokens ; tgt tokens], loss on the tgt half."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step % pairs)
+    k1, k2 = jax.random.split(key)
+    B, L = 4, 16
+    src = jax.random.randint(k1, (B, L // 2), 0, cfg.vocab_size)
+    tgt = jax.random.randint(k2, (B, L // 2), 0, cfg.vocab_size)
+    toks = jnp.concatenate([src, tgt], axis=1)
+    labels = jnp.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+    mask = jnp.concatenate([jnp.zeros((B, L // 2)), jnp.ones((B, L // 2))],
+                           axis=1)
+    return {"tokens": toks, "labels": labels, "mask": mask}
+
+
+def _adapt(params, cfg, mode, steps, evalb, task_fn):
+    mask = trainable_mask(params, mode)
+    tr, fr = partition_params(params, mask)
+    opt = AdamW(OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps,
+                                schedule="constant"))
+    opt_state = opt.init(tr)
+
+    @jax.jit
+    def step_fn(tr, fr, opt_state, batch):
+        def loss_of(t):
+            return loss_fn(combine_params(t, fr), cfg, batch)
+        l, g = jax.value_and_grad(loss_of)(tr)
+        tr, opt_state = opt.update(tr, g, opt_state)
+        return tr, opt_state, l
+
+    task_loss = None
+    for s in range(steps):
+        tr, opt_state, task_loss = step_fn(tr, fr, opt_state, task_fn(s))
+    full = combine_params(tr, fr)
+    return float(task_loss), perplexity(full, cfg, evalb), \
+        count_trainable(params, mask)
+
+
+def run(quick=True):
+    rows = []
+    params, cfg = get_trained_repro(quick=quick)
+    ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [ds.batch_at(0)])
+    evalb = eval_batches(cfg, n=2)
+    steps = 15 if quick else 80
+    task = lambda s: uuid_task_batch(cfg, s)
+
+    ppl0 = perplexity(params, cfg, evalb)
+    rows.append(("fig6/original", 0.0, f"ppl={ppl0:.2f}"))
+
+    sp, scfg, _ = compress_model(
+        params, cfg, CURConfig(r_max=R, n_compress_layers=3), calib)
+    tl, ppl, n = _adapt(sp, scfg, "dU", steps, evalb, task)
+    rows.append(("fig6/curing_dU", 0.0,
+                 f"task_loss={tl:.3f} orig_ppl={ppl:.2f} trainable={n}"))
+    for mode in ("lora", "mora", "curlora"):
+        wrapped = wrap_model(params, cfg, mode, R)
+        tl, ppl, n = _adapt(wrapped, cfg, mode, steps, evalb, task)
+        rows.append((f"fig6/{mode}", 0.0,
+                     f"task_loss={tl:.3f} orig_ppl={ppl:.2f} trainable={n}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=False))

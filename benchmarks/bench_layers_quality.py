@@ -1,0 +1,45 @@
+"""Paper Fig. 4: quality vs number of compressed layers, and Table 4 /
+Fig. 11 (App. D.1): angular-distance vs last-N vs random layer selection."""
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import SyntheticLM
+from repro.train.evaluate import perplexity
+from repro.zoo import data_config, eval_batches, get_trained_repro
+
+
+def run(quick=True):
+    rows = []
+    params, cfg = get_trained_repro(quick=quick)
+    ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [ds.batch_at(0)])
+    evalb = eval_batches(cfg, n=2)
+
+    ppl0 = perplexity(params, cfg, evalb)
+    rows.append(("fig4/original", 0.0, f"ppl={ppl0:.2f}"))
+    counts = (2, 4) if quick else (1, 2, 3, 4, 5, 6)
+    for n in counts:
+        sp, scfg, info = compress_model(
+            params, cfg, CURConfig(r_max=64, n_compress_layers=n), calib)
+        ppl = perplexity(sp, scfg, evalb)
+        rows.append((f"fig4/compress_{n}_layers", 0.0, f"ppl={ppl:.2f}"))
+
+    # Table 4: the distances themselves
+    dists = ",".join(f"{d:.3f}" for d in info.distances)
+    rows.append(("table4/angular_distances", 0.0, f"[{dists}]"))
+
+    # Fig. 11: layer-selection strategies at fixed budget
+    n = 3
+    for strat in ("angular", "last", "random"):
+        sp, scfg, info = compress_model(
+            params, cfg,
+            CURConfig(r_max=64, n_compress_layers=n, layer_selection=strat),
+            calib)
+        ppl = perplexity(sp, scfg, evalb)
+        rows.append((f"fig11/select_{strat}", 0.0,
+                     f"layers={info.layers} ppl={ppl:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=False))

@@ -1,0 +1,33 @@
+"""Paper Table 3 / Fig. 9 (App. C.2): r_max sweep — time, size reduction,
+perplexity. Scaled ranks for the CPU model (paper: 128/256/512)."""
+import time
+
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import SyntheticLM
+from repro.train.evaluate import perplexity
+from repro.zoo import data_config, eval_batches, get_trained_repro
+
+
+def run(quick=True):
+    rows = []
+    params, cfg = get_trained_repro(quick=quick)
+    ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [ds.batch_at(0)])
+    evalb = eval_batches(cfg, n=2)
+    ranks = (32, 64) if quick else (16, 32, 64, 128)
+    for r in ranks:
+        t0 = time.perf_counter()
+        sp, scfg, info = compress_model(
+            params, cfg, CURConfig(r_max=r, n_compress_layers=3), calib)
+        dt = time.perf_counter() - t0
+        ppl = perplexity(sp, scfg, evalb)
+        rows.append((f"table3/rmax_{r}", dt * 1e6,
+                     f"saved={info.params_saved*4/2**20:.2f}MiB "
+                     f"ppl={ppl:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=False))

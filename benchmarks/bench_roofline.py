@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run JSON artifacts (§Roofline deliverable).
+Reads results/dryrun_*.json and emits one row per (arch x shape x mesh)."""
+import glob
+import json
+import os
+
+
+def run(quick=True):
+    rows = []
+    files = sorted(glob.glob("results/dryrun_*.json"))
+    if not files:
+        return [("roofline/no_dryrun_results", 0.0,
+                 "run: python -m repro.launch.dryrun --all --out "
+                 "results/dryrun_single_pod.json")]
+    seen = set()
+    for path in files:
+        try:
+            cells = json.load(open(path))
+        except Exception:
+            continue
+        for c in cells:
+            key = (c.get("arch"), c.get("shape"), c.get("mesh"),
+                   c.get("cur", False))
+            if key in seen:
+                continue
+            seen.add(key)
+            tag = (f"roofline/{c['arch']}/{c['shape']}/{c.get('mesh','?')}"
+                   + ("/cur" if c.get("cur") else ""))
+            if c["status"] == "SKIP":
+                rows.append((tag, 0.0, "SKIP(" + c.get("reason", "")[:40]
+                             + ")"))
+            elif c["status"] != "OK":
+                rows.append((tag, 0.0, f"FAIL {c.get('error','')[:60]}"))
+            else:
+                rows.append((
+                    tag,
+                    max(c["compute_s"], c["memory_s"],
+                        c["collective_s"]) * 1e6,
+                    f"compute={c['compute_s']*1e3:.1f}ms "
+                    f"memory={c['memory_s']*1e3:.1f}ms "
+                    f"coll={c['collective_s']*1e3:.1f}ms "
+                    f"dom={c['dominant']} "
+                    f"roof_frac={c['roofline_fraction']:.4f} "
+                    f"useful={c['useful_flop_ratio']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=False))

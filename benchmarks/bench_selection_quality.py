@@ -1,0 +1,37 @@
+"""Paper Table 5 / Fig. 12 (App. D.2): row/column selection strategies —
+CURing (WANDA+DEIM) vs WANDA-only vs DEIM-only vs weight-magnitude vs
+random: Frobenius reconstruction error and perplexity."""
+import numpy as np
+
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import SyntheticLM
+from repro.train.evaluate import perplexity
+from repro.zoo import data_config, eval_batches, get_trained_repro
+
+METHODS = ("wanda_deim", "wanda", "deim", "weight", "random")
+
+
+def run(quick=True):
+    rows = []
+    params, cfg = get_trained_repro(quick=quick)
+    ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [ds.batch_at(0)])
+    evalb = eval_batches(cfg, n=2)
+    methods = METHODS[:3] + ("random",) if quick else METHODS
+    n = 2 if quick else 3
+    for method in methods:
+        sp, scfg, info = compress_model(
+            params, cfg,
+            CURConfig(r_max=64, n_compress_layers=n, selection=method),
+            calib)
+        fro = sum(w.fro_err for w in info.weights)
+        ppl = perplexity(sp, scfg, evalb)
+        rows.append((f"table5/{method}", 0.0,
+                     f"fro_err={fro:.2f} ppl={ppl:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=False))

@@ -1,0 +1,45 @@
+"""Paper Table 2 / Fig. 8 (App. C.1): which weights to CUR — {Q,K,Gate}
+combos: time, size reduction, and quality (perplexity)."""
+import time
+
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import SyntheticLM
+from repro.train.evaluate import perplexity
+from repro.zoo import data_config, eval_batches, get_trained_repro
+
+COMBOS = {
+    "all": ("wq", "wk", "w_gate"),
+    "gate_only": ("w_gate",),
+    "qk_only": ("wq", "wk"),
+    "q_gate": ("wq", "w_gate"),
+    "k_gate": ("wk", "w_gate"),
+}
+
+
+def run(quick=True):
+    rows = []
+    params, cfg = get_trained_repro(quick=quick)
+    ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [ds.batch_at(0)])
+    evalb = eval_batches(cfg, n=2)
+    n_layers = 2 if quick else 4
+    combos = list(COMBOS)[:3] if quick else list(COMBOS)
+    for name in combos:
+        targets = COMBOS[name]
+        cfg_t = cfg.replace(cur_targets=targets)
+        t0 = time.perf_counter()
+        sp, scfg, info = compress_model(
+            params, cfg_t, CURConfig(r_max=64, n_compress_layers=n_layers),
+            calib)
+        dt = time.perf_counter() - t0
+        ppl = perplexity(sp, scfg, evalb)
+        rows.append((f"table2/{name}", dt * 1e6,
+                     f"saved={info.params_saved*4/2**20:.2f}MiB "
+                     f"ppl={ppl:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(quick=False))

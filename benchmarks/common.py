@@ -1,0 +1,23 @@
+"""Shared benchmark utilities."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=1, iters=3):
+    """Median wall-time of fn(*args) in seconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows):
+    """Print the harness CSV contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only MOD]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "bench_compression",          # Table 1 (+ randomized-SVD speedup)
+    "bench_weight_selection",     # Table 2 / Fig 8
+    "bench_rank_sweep",           # Table 3 / Fig 9
+    "bench_layers_quality",       # Fig 4 + Table 4 / Fig 11
+    "bench_selection_quality",    # Table 5 / Fig 12
+    "bench_healing",              # Fig 5
+    "bench_forgetting",           # Fig 6 / Fig 7
+    "bench_activation_alignment", # Table 6
+    "bench_kernels",              # kernel-level
+    "bench_roofline",             # dry-run roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep sizes (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            emit(rows)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

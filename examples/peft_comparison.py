@@ -1,0 +1,93 @@
+"""CURing-as-PEFT vs LoRA / MoRA / CURLoRA (paper §5.2, §6.2, Fig. 5-7).
+
+All methods get the SAME trainable-parameter budget (r^2 per target
+weight). Adapts to a "new task" (a synthetic corpus with a different token
+distribution) while tracking forgetting (perplexity on the original
+corpus).
+
+    PYTHONPATH=src python examples/peft_comparison.py [--quick]
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import CURConfig, OptimizerConfig
+from repro.core import calibrate, compress_model
+from repro.core.heal import partition_params, trainable_mask
+from repro.core.peft import count_trainable, wrap_model
+from repro.data.tokens import SyntheticLM
+from repro.models.model import loss_fn
+from repro.optim.adamw import AdamW
+from repro.train.evaluate import perplexity
+from repro.zoo import data_config, eval_batches, get_trained_repro
+
+R = 32
+
+
+def adapt(params, cfg, mode, steps, new_ds, old_eval, log_every=10):
+    mask = trainable_mask(params, mode)
+    tr, fr = partition_params(params, mask)
+    opt = AdamW(OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=steps,
+                                schedule="constant"))
+    opt_state = opt.init(tr)
+
+    from repro.core.heal import combine_params
+
+    @jax.jit
+    def step(tr, fr, opt_state, batch):
+        def loss_of(t):
+            return loss_fn(combine_params(t, fr), cfg, batch)
+        l, g = jax.value_and_grad(loss_of)(tr)
+        tr, opt_state = opt.update(tr, g, opt_state)
+        return tr, opt_state, l
+
+    hist = []
+    for s in range(steps):
+        tr, opt_state, l = step(tr, fr, opt_state, new_ds.batch_at(s))
+        if s % log_every == 0 or s == steps - 1:
+            full = combine_params(tr, fr)
+            old_ppl = perplexity(full, cfg, old_eval)
+            hist.append((s, float(l), old_ppl))
+    return combine_params(tr, fr), hist, count_trainable(params, mask)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    steps = 20 if args.quick else args.steps
+
+    params, cfg = get_trained_repro(quick=args.quick)
+    old_eval = eval_batches(cfg, n=2)
+    new_ds = SyntheticLM(data_config(cfg, seed=777))   # the "new task"
+
+    # CURing dU: compress first, then treat dU as the adapter
+    calib_ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [calib_ds.batch_at(0)])
+    sp, scfg, _ = compress_model(
+        params, cfg, CURConfig(r_max=R, n_compress_layers=3), calib)
+
+    results = {}
+    _, hist, n_tr = adapt(sp, scfg, "dU", steps, new_ds, old_eval)
+    results["CURing dU"] = (hist, n_tr)
+    for mode in ("lora", "mora", "curlora"):
+        wrapped = wrap_model(params, cfg, mode, R)
+        _, hist, n_tr = adapt(wrapped, cfg, mode, steps, new_ds, old_eval)
+        results[mode] = (hist, n_tr)
+
+    print(f"\n=== adaptation vs forgetting ({steps} steps, "
+          f"budget r={R}) ===")
+    print(f"{'method':12s} {'trainable':>10s} {'new-task loss':>14s} "
+          f"{'orig ppl (forgetting)':>22s}")
+    for name, (hist, n_tr) in results.items():
+        s, l, p = hist[-1]
+        print(f"{name:12s} {n_tr:10d} {l:14.4f} {p:22.2f}")
+    print("\ncurves (step, new-task loss, original ppl):")
+    for name, (hist, _) in results.items():
+        print(f"  {name}: " + "  ".join(
+            f"({s},{l:.3f},{p:.1f})" for s, l, p in hist))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: CURing in ~40 lines.
+
+Builds a small llama-family model, calibrates on synthetic data, compresses
+3 layers with WANDA x DEIM CUR decomposition, and compares outputs.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_repro
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import DataConfig, SyntheticLM
+from repro.models import forward, init_params, loss_fn
+
+
+def main():
+    cfg = get_repro()
+    print(f"model: {cfg.name}  ({cfg.param_count()/1e6:.1f}M params)")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                global_batch=4))
+    calib_batches = [ds.batch_at(i) for i in range(2)]
+
+    print("calibrating (WANDA activations + angular distances)...")
+    calib = calibrate(params, cfg, calib_batches)
+
+    ccfg = CURConfig(r_max=64, n_compress_layers=3)
+    print(f"compressing {ccfg.n_compress_layers} layers "
+          f"(r_max={ccfg.r_max}, selection={ccfg.selection})...")
+    cparams, ccfg_model, info = compress_model(params, cfg, ccfg, calib)
+
+    print(f"  layers chosen by angular distance: {info.layers}")
+    print(f"  weights compressed: {len(info.weights)}, "
+          f"params saved: {info.params_saved/1e3:.0f}k "
+          f"({info.params_saved/cfg.param_count():.1%} of model)")
+    print(f"  total compression time: {info.seconds_total:.1f}s")
+
+    batch = ds.batch_at(100)
+    l0 = float(loss_fn(params, cfg, batch))
+    l1 = float(loss_fn(cparams, ccfg_model, batch))
+    y0 = forward(params, cfg, batch)
+    y1 = forward(cparams, ccfg_model, batch)
+    corr = float(jnp.corrcoef(y0.ravel(), y1.ravel())[0, 1])
+    print(f"loss: original {l0:.4f} -> compressed {l1:.4f}; "
+          f"logit correlation {corr:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONs."""
+import json, sys
+
+def fmt_cell(c):
+    if c["status"] == "SKIP":
+        return f"| {c['arch']} | {c['shape']} | SKIP | — | — | — | — | — | — |"
+    if c["status"] != "OK":
+        return f"| {c['arch']} | {c['shape']} | FAIL | — | — | — | — | — | — |"
+    return (f"| {c['arch']} | {c['shape']} | OK "
+            f"| {c['compute_s']*1e3:.1f} | {c['memory_s']*1e3:.1f} "
+            f"| {c['collective_s']*1e3:.1f} | {c['dominant']} "
+            f"| {c['useful_flop_ratio']:.3f} "
+            f"| {c['roofline_fraction']*100:.2f}% |")
+
+def main(path):
+    cells = json.load(open(path))
+    print("| arch | shape | status | compute ms | memory ms | collective ms"
+          " | dominant | MODEL/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        print(fmt_cell(c))
+
+if __name__ == "__main__":
+    main(sys.argv[1])

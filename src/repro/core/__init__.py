@@ -1,0 +1,21 @@
+"""CURing — the paper's primary contribution (compression via CUR
+decomposition with WANDA x DEIM selection, angular-distance layer choice,
+and dU-only KD healing)."""
+from repro.core.angular import angular_distance, layer_distances, select_layers
+from repro.core.calibrate import CalibStats, calibrate
+from repro.core.compress import (
+    CompressInfo,
+    compress_model,
+    compress_weight,
+    fold_cur,
+    select_indices,
+)
+from repro.core.cur import (
+    compute_u,
+    cur_from_indices,
+    exact_svd,
+    randomized_svd,
+    rank_for,
+)
+from repro.core.deim import deim
+from repro.core.wanda import wanda_scores

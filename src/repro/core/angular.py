@@ -1,0 +1,54 @@
+"""Angular-distance layer selection (paper §4.1).
+
+d(h_{n-1}, h_n) = arccos( <h_{n-1}, h_n> / (||h_{n-1}|| ||h_n||) ) / pi
+over the hidden state of the last (non-padded) token, averaged over the
+calibration set. Layers with the smallest distance to their predecessor are
+the most redundant and are compressed first; the first and last layers are
+always retained.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def angular_distance(h_prev: jnp.ndarray, h_next: jnp.ndarray) -> jnp.ndarray:
+    """h_prev/h_next: (n_samples, D) last-token hidden states.
+    Returns the mean angular distance (scalar in [0, 1])."""
+    a = h_prev.astype(jnp.float32)
+    b = h_next.astype(jnp.float32)
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+    cos = jnp.clip(num / jnp.maximum(den, 1e-30), -1.0, 1.0)
+    return jnp.mean(jnp.arccos(cos) / jnp.pi)
+
+
+def layer_distances(hidden: jnp.ndarray) -> np.ndarray:
+    """hidden: (L+1, n_samples, D) — embedding output plus each block's
+    output. Returns (L,) distances where entry n is d(h_n_in, h_n_out),
+    i.e. how much block n changes its input."""
+    L = hidden.shape[0] - 1
+    return np.array([float(angular_distance(hidden[i], hidden[i + 1]))
+                     for i in range(L)])
+
+
+def select_layers(distances: np.ndarray, n_compress: int,
+                  method: str = "angular", seed: int = 0) -> list:
+    """Pick layers to compress. First (0) and last (L-1) are excluded,
+    matching the paper. ``distances[n]`` is the angular distance of block n.
+    """
+    L = len(distances)
+    candidates = list(range(1, L - 1))
+    n_compress = min(n_compress, len(candidates))
+    if method == "angular":
+        order = sorted(candidates, key=lambda i: distances[i])
+    elif method == "last":
+        order = sorted(candidates, reverse=True)
+    elif method == "random":
+        rng = np.random.RandomState(seed)
+        order = list(rng.permutation(candidates))
+    else:
+        raise ValueError(method)
+    return sorted(order[:n_compress])

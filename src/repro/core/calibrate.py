@@ -1,0 +1,101 @@
+"""Calibration pass (paper §4.1/§4.2): one forward over the calibration set
+collecting, per block,
+
+  - the last-token hidden state entering/leaving every block (for
+    angular-distance layer selection), and
+  - the accumulated squared input activations of every CURing target weight
+    (for WANDA importance).
+
+Runs block-by-block in Python (compression happens at CPU scale; the
+instrumentation mirrors ``model.block_forward`` exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, MLP, MOE
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models.layers import norm
+from repro.models.mlp import mlp_forward
+from repro.models.moe import moe_forward
+from repro.models.model import _embed
+
+
+@dataclasses.dataclass
+class CalibStats:
+    hidden: np.ndarray            # (L+1, n_samples, D) last-token states
+    act_sq: List[Dict[str, np.ndarray]]   # per-layer: name -> (m,) sum x^2
+    n_tokens: int
+    distances: np.ndarray = None  # filled by compress
+
+
+def iter_layer_params(params, cfg):
+    """Yield (layer_idx, spec, per-layer param dict) in network order."""
+    li = 0
+    for gi, (pattern, reps) in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+        for r in range(reps):
+            for pi, spec in enumerate(pattern):
+                lp = jax.tree.map(lambda a: a[r], gp[pi])
+                yield li, spec, lp
+                li += 1
+
+
+# target weight -> which normed input feeds it
+_MIXER_TARGETS = {"wq", "wk", "wv", "w_z", "w_x", "w_B", "w_C", "w_dt"}
+_MLP_TARGETS = {"w_gate", "w_up"}
+
+
+def _accum(store, name, h):
+    """Accumulate sum of squares over all tokens. h: (B, S, m)."""
+    sq = jnp.sum(h.astype(jnp.float32) ** 2, axis=(0, 1))
+    store[name] = store.get(name, 0.0) + np.asarray(sq)
+
+
+def calibrate(params, cfg, batches, mesh=None) -> CalibStats:
+    """batches: list of batch dicts (each one calibration micro-batch)."""
+    hidden_acc = None
+    act_sq = [dict() for _ in range(cfg.n_layers)]
+    n_tokens = 0
+
+    for batch in batches:
+        x = _embed(params, cfg, batch)
+        B, S, D = x.shape
+        n_tokens += B * S
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        hs = [np.asarray(x[:, -1, :])]
+        for li, spec, p in iter_layer_params(params, cfg):
+            h1 = norm(x, p.get("norm1"), cfg)
+            for t in cfg.cur_targets:
+                if t in _MIXER_TARGETS and t in p:
+                    _accum(act_sq[li], t, h1)
+            if spec.mixer in (ATTN, ATTN_LOCAL):
+                win = cfg.window if spec.mixer == ATTN_LOCAL else 0
+                a = attn.attn_forward(h1, p, cfg, positions, window=win)
+            elif spec.mixer == MAMBA:
+                a = mb.mamba_forward(h1, p, cfg)
+            else:
+                raise ValueError(spec.mixer)
+            x = x + a
+            if spec.mlp in (MLP, MOE):
+                h2 = norm(x, p.get("norm2"), cfg)
+                for t in cfg.cur_targets:
+                    if t in _MLP_TARGETS and t in p:
+                        _accum(act_sq[li], t, h2)
+                if spec.mlp == MLP:
+                    x = x + mlp_forward(h2, p, cfg)
+                else:
+                    x = x + moe_forward(h2, p, cfg, mesh)
+            hs.append(np.asarray(x[:, -1, :]))
+        hs = np.stack(hs)                           # (L+1, B, D)
+        hidden_acc = hs if hidden_acc is None else np.concatenate(
+            [hidden_acc, hs], axis=1)
+
+    return CalibStats(hidden=hidden_acc, act_sq=act_sq, n_tokens=n_tokens)

@@ -1,0 +1,199 @@
+"""The CURing compression pipeline (paper §4).
+
+``compress_model``:
+  1. angular-distance layer selection over the calibration hidden states
+     (first/last layers excluded),
+  2. per selected layer, per target weight: WANDA importance -> SVD
+     (exact, or randomized beyond-paper path) -> DEIM row/col indices ->
+     C = W[:, q], R = W[p, :], U0 = C+ W R+ , dU = 0,
+  3. rebuild the model with per-layer (unrolled) groups so compressed and
+     dense layers coexist.
+
+Selection-strategy ablations (paper App. D.2) are first-class:
+``wanda_deim`` (CURing) | ``wanda`` | ``deim`` | ``weight`` | ``random``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CURConfig, ModelConfig
+from repro.core import angular
+from repro.core.calibrate import CalibStats, iter_layer_params
+from repro.core.cur import (
+    cur_from_indices,
+    exact_svd,
+    randomized_svd,
+    rank_for,
+    spectral_error_bound,
+)
+from repro.core.deim import deim
+from repro.core.wanda import wanda_scores
+
+
+@dataclasses.dataclass
+class WeightInfo:
+    layer: int
+    name: str
+    shape: Tuple[int, int]
+    rank: int
+    rows: np.ndarray
+    cols: np.ndarray
+    fro_err: float          # ||W - CUR||_F
+    fro_w: float            # ||W||_F
+    bound: float            # Theorem 3.1 spectral bound (wanda matrix)
+    seconds: float
+    params_before: int
+    params_after: int
+
+
+@dataclasses.dataclass
+class CompressInfo:
+    distances: np.ndarray
+    layers: List[int]
+    weights: List[WeightInfo]
+    seconds_total: float
+
+    @property
+    def params_saved(self) -> int:
+        return sum(w.params_before - w.params_after for w in self.weights)
+
+
+def _top_k_indices(scores: jnp.ndarray, r: int) -> jnp.ndarray:
+    _, idx = jax.lax.top_k(scores, r)
+    return jnp.sort(idx)
+
+
+def select_indices(W: jnp.ndarray, r: int, method: str,
+                   act_sq: Optional[np.ndarray], key,
+                   svd_method: str = "exact"):
+    """Pick r row indices p and r column indices q of W."""
+    svd_fn = (exact_svd if svd_method == "exact"
+              else lambda M, rr: randomized_svd(M, rr, key))
+    aux = {}
+    if method == "wanda_deim":
+        S = wanda_scores(W, jnp.asarray(act_sq))
+        P, sig, Q = svd_fn(S, min(r + 1, min(W.shape)))
+        p, q = deim(P[:, :r]), deim(Q[:, :r])
+        aux = {"P": P, "Q": Q, "sig": sig}
+    elif method == "wanda":
+        S = wanda_scores(W, jnp.asarray(act_sq))
+        p = _top_k_indices(jnp.linalg.norm(S, axis=1), r)
+        q = _top_k_indices(jnp.linalg.norm(S, axis=0), r)
+    elif method == "deim":
+        P, sig, Q = svd_fn(W.astype(jnp.float32), min(r + 1, min(W.shape)))
+        p, q = deim(P[:, :r]), deim(Q[:, :r])
+        aux = {"P": P, "Q": Q, "sig": sig}
+    elif method == "weight":
+        Wf = W.astype(jnp.float32)
+        p = _top_k_indices(jnp.linalg.norm(Wf, axis=1), r)
+        q = _top_k_indices(jnp.linalg.norm(Wf, axis=0), r)
+    elif method == "random":
+        k1, k2 = jax.random.split(key)
+        p = jax.random.choice(k1, W.shape[0], (r,), replace=False)
+        q = jax.random.choice(k2, W.shape[1], (r,), replace=False)
+    else:
+        raise ValueError(method)
+    return p, q, aux
+
+
+def compress_weight(W: jnp.ndarray, name: str, layer: int,
+                    cur_cfg: CURConfig, act_sq: Optional[np.ndarray],
+                    key) -> Tuple[dict, WeightInfo]:
+    t0 = time.perf_counter()
+    m, n = W.shape
+    r = rank_for(m, n, cur_cfg.r_max)
+    p, q, aux = select_indices(W, r, cur_cfg.selection, act_sq, key,
+                               cur_cfg.svd)
+    C, U, R = cur_from_indices(W.astype(jnp.float32), p, q)
+    approx_err = float(jnp.linalg.norm(W.astype(jnp.float32) - C @ U @ R))
+    bound = float("nan")
+    if "P" in aux and aux["sig"].shape[0] > r:
+        bound = float(spectral_error_bound(
+            W, aux["P"][:, :r], aux["Q"][:, :r], aux["sig"], p, q))
+    dt = time.perf_counter() - t0
+    leaf = {
+        "C": C.astype(W.dtype),
+        "U0": U.astype(jnp.float32),
+        "dU": jnp.zeros_like(U, jnp.float32),
+        "R": R.astype(W.dtype),
+    }
+    info = WeightInfo(
+        layer=layer, name=name, shape=(m, n), rank=r,
+        rows=np.asarray(p), cols=np.asarray(q),
+        fro_err=approx_err, fro_w=float(jnp.linalg.norm(W)),
+        bound=bound, seconds=dt,
+        params_before=m * n, params_after=m * r + r * r + r * n)
+    return leaf, info
+
+
+def fold_cur(leaf: dict) -> dict:
+    """Deploy-time fold: C' = C @ (U0 + dU) — halves the matmul chain."""
+    cu = leaf["C"].astype(jnp.float32) @ (leaf["U0"] + leaf["dU"])
+    return {"CU": cu.astype(leaf["C"].dtype), "R": leaf["R"]}
+
+
+def unrolled_config(cfg: ModelConfig) -> ModelConfig:
+    """Per-layer groups so compressed/dense layers can differ in structure."""
+    groups = tuple(((spec,), 1) for spec in cfg.blocks)
+    return cfg.replace(groups=groups, scan_layers=False)
+
+
+def unroll_params(params, cfg: ModelConfig):
+    """Restructure params to match ``unrolled_config``."""
+    new = {k: v for k, v in params.items() if k != "groups"}
+    new["groups"] = []
+    for li, spec, lp in iter_layer_params(params, cfg):
+        stacked = jax.tree.map(lambda a: a[None], lp)
+        new["groups"].append([stacked])
+    return new
+
+
+def compress_model(params, cfg: ModelConfig, cur_cfg: CURConfig,
+                   calib: CalibStats, layers: Optional[List[int]] = None):
+    """Returns (new_params, new_cfg, CompressInfo)."""
+    t_start = time.perf_counter()
+    distances = angular.layer_distances(calib.hidden)
+    if layers is None:
+        layers = angular.select_layers(
+            distances, cur_cfg.n_compress_layers,
+            cur_cfg.layer_selection, cur_cfg.seed)
+    layer_set = set(layers)
+
+    new_cfg = unrolled_config(cfg)
+    new_params = unroll_params(params, cfg)
+    infos: List[WeightInfo] = []
+    key = jax.random.PRNGKey(cur_cfg.seed)
+
+    for li, spec, lp in iter_layer_params(params, cfg):
+        if li not in layer_set:
+            continue
+        block = new_params["groups"][li][0]
+        for t in cfg.cur_targets:
+            if t not in block:
+                continue
+            W = block[t][0]                      # strip leading rep dim
+            if W.ndim != 2:                      # (e.g. MoE expert stacks)
+                continue
+            key, sub = jax.random.split(key)
+            act = calib.act_sq[li].get(t) if calib.act_sq else None
+            if act is None and cur_cfg.selection in ("wanda_deim", "wanda"):
+                raise ValueError(
+                    f"no calibration activations for layer {li} weight {t}")
+            leaf, info = compress_weight(W, t, li, cur_cfg, act, sub)
+            if info.params_after >= info.params_before:
+                continue                         # Eq. 2 guard
+            if cur_cfg.fold_u:
+                leaf = fold_cur(leaf)
+            block[t] = jax.tree.map(lambda a: a[None], leaf)
+            infos.append(info)
+
+    cinfo = CompressInfo(
+        distances=distances, layers=sorted(layer_set), weights=infos,
+        seconds_total=time.perf_counter() - t_start)
+    return new_params, new_cfg, cinfo

@@ -1,0 +1,120 @@
+"""Healing (paper §4.5): layer-wise knowledge distillation updating only the
+dU component of each CUR link matrix (U = U0 + dU; C, R, U0 frozen).
+
+Loss = (1 - alpha) * [ layer-wise MSE + T^2-scaled logit KL ]
+       + alpha * CE(labels)
+with alpha = 0.1, T = 10 (paper App. B). Theorem 4.3 guarantees the dU
+gradient lies in the subspace {C^T M R^T} — property-tested in
+tests/test_heal.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import forward_hidden
+
+
+# ---------------------------------------------------------------------------
+# trainable-parameter partitioning
+# ---------------------------------------------------------------------------
+
+TRAINABLE_LEAVES = {
+    "dU": ("dU",),
+    "lora": ("lora_A", "lora_B"),
+    "mora": ("mora",),
+    "curlora": ("cU",),
+    "all": (),
+}
+
+
+def trainable_mask(params, mode: str):
+    """Bool pytree: True where the leaf is trainable under ``mode``."""
+    if mode == "all":
+        return jax.tree.map(lambda _: True, params)
+    names = TRAINABLE_LEAVES[mode]
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (jax.tree.map(lambda _: k in names, v)
+                        if k in names else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v) for v in node]
+            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
+        return False
+
+    return walk(params)
+
+
+def partition_params(params, mask):
+    """Split params into (trainable, frozen) pytrees (None placeholders)."""
+    train = jax.tree.map(lambda p, m: p if m else None, params, mask,
+                         is_leaf=lambda x: x is None)
+    frozen = jax.tree.map(lambda p, m: None if m else p, params, mask,
+                          is_leaf=lambda x: x is None)
+    return train, frozen
+
+
+def combine_params(train, frozen):
+    return jax.tree.map(lambda t, f: t if f is None else f, train, frozen,
+                        is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# distillation loss
+# ---------------------------------------------------------------------------
+
+def kd_loss_fn(student_params, cfg_s, batch, teacher_logits, teacher_hidden,
+               *, alpha: float = 0.1, temp: float = 10.0, mesh=None,
+               layer_mse: bool = True, logit_kl: bool = True):
+    """Layer-wise KD loss. teacher_hidden: (L+1, B, S, D)."""
+    s_logits, s_hidden = forward_hidden(student_params, cfg_s, batch, mesh)
+    s_logits = s_logits.astype(jnp.float32)
+    t_logits = teacher_logits.astype(jnp.float32)
+
+    distill = 0.0
+    if layer_mse:
+        diff = (s_hidden.astype(jnp.float32)
+                - teacher_hidden.astype(jnp.float32))
+        distill = distill + jnp.mean(jnp.square(diff))
+    if logit_kl:
+        t_lp = jax.nn.log_softmax(t_logits / temp, axis=-1)
+        s_lp = jax.nn.log_softmax(s_logits / temp, axis=-1)
+        kl = jnp.sum(jnp.exp(t_lp) * (t_lp - s_lp), axis=-1)
+        distill = distill + (temp ** 2) * jnp.mean(kl)
+
+    labels = batch["labels"]
+    lp = jax.nn.log_softmax(s_logits, axis=-1)
+    ce = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0].mean()
+    return (1.0 - alpha) * distill + alpha * ce
+
+
+def make_heal_step(cfg_s, cfg_t, teacher_params, optimizer, *,
+                   mode: str = "dU", alpha: float = 0.1, temp: float = 10.0,
+                   mesh=None, layer_mse: bool = True, logit_kl: bool = True):
+    """Returns jit-able ``step(train, frozen, opt_state, batch) ->
+    (train, opt_state, loss)``. Teacher outputs are recomputed per batch
+    (no-grad) — at healing scale this beats storing (L+1,B,S,D) activations.
+    """
+
+    def step(train, frozen, opt_state, batch):
+        t_logits, t_hidden = forward_hidden(
+            teacher_params, cfg_t, batch, mesh)
+        t_logits = jax.lax.stop_gradient(t_logits)
+        t_hidden = jax.lax.stop_gradient(t_hidden)
+
+        def loss_of(tr):
+            params = combine_params(tr, frozen)
+            return kd_loss_fn(params, cfg_s, batch, t_logits, t_hidden,
+                              alpha=alpha, temp=temp, mesh=mesh,
+                              layer_mse=layer_mse, logit_kl=logit_kl)
+
+        loss, grads = jax.value_and_grad(loss_of)(train)
+        train, opt_state = optimizer.update(train, grads, opt_state)
+        return train, opt_state, loss
+
+    return step

@@ -1,0 +1,80 @@
+"""PEFT baselines the paper compares against (§5.2, §6.2): LoRA, MoRA and
+CURLoRA, implemented as weight adapters dispatched by ``layers.apply_w``.
+
+Budget matching (paper Fig. 5-7): CURing's trainable dU has r^2 params per
+target weight, so for a weight (m, n):
+  LoRA rank  = max(1, r^2 // (m + n))
+  MoRA size  = r (square matrix, same r^2 params)
+  CURLoRA    = r columns/rows with only U (r^2) trainable.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibrate import iter_layer_params
+from repro.core.cur import compute_u
+
+
+def lora_rank_for_budget(m: int, n: int, r: int) -> int:
+    return max(1, (r * r) // (m + n))
+
+
+def _wrap_weight(W, method: str, r: int, key):
+    m, n = W.shape
+    if method == "lora":
+        rl = lora_rank_for_budget(m, n, r)
+        A = jax.random.normal(key, (m, rl), jnp.float32) * (1.0 / m ** 0.5)
+        return {"base": W, "lora_A": A.astype(W.dtype),
+                "lora_B": jnp.zeros((rl, n), W.dtype)}
+    if method == "mora":
+        return {"base": W, "mora": jnp.zeros((r, r), jnp.float32)}
+    if method == "curlora":
+        # CURLoRA (Fawi 2024): sample by INVERTED column/row norm
+        # probabilities (least important features) — implicit regularization.
+        Wf = W.astype(jnp.float32)
+        k1, k2 = jax.random.split(key)
+        cn = jnp.linalg.norm(Wf, axis=0) ** 2
+        rn = jnp.linalg.norm(Wf, axis=1) ** 2
+        pc = (1.0 / (cn + 1e-9))
+        pr = (1.0 / (rn + 1e-9))
+        q = jax.random.choice(k1, n, (min(r, n),), replace=False,
+                              p=pc / pc.sum())
+        p = jax.random.choice(k2, m, (min(r, m),), replace=False,
+                              p=pr / pr.sum())
+        return {"base": W, "cC": W[:, q], "cU": jnp.zeros(
+            (p.shape[0], p.shape[0]), jnp.float32), "cR": W[p, :]}
+    raise ValueError(method)
+
+
+def wrap_model(params, cfg, method: str, r: int, seed: int = 0,
+               targets: Iterable[str] = None):
+    """Attach adapters to every target weight; returns new params pytree.
+    Train with ``heal.trainable_mask(params, method)``."""
+    targets = tuple(targets) if targets else cfg.cur_targets
+    key = jax.random.PRNGKey(seed)
+    new = {k: v for k, v in params.items() if k != "groups"}
+    new["groups"] = jax.tree.map(lambda x: x, params["groups"])
+    for gi, (pattern, reps) in enumerate(cfg.groups):
+        for pi, spec in enumerate(pattern):
+            block = new["groups"][gi][pi]
+            for t in targets:
+                if t not in block or not hasattr(block[t], "ndim"):
+                    continue
+                if block[t].ndim != 3:       # stacked (reps, m, n) only
+                    continue
+                key, sub = jax.random.split(key)
+                stacked = block[t]
+                wrapped = jax.vmap(
+                    lambda W, k: _wrap_weight(W, method, r, k)
+                )(stacked, jax.random.split(sub, stacked.shape[0]))
+                block[t] = wrapped
+    return new
+
+
+def count_trainable(params, mask) -> int:
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda p, m: p.size if m else 0, params, mask))
+    return int(sum(leaves))

@@ -1,0 +1,15 @@
+"""WANDA importance (Sun et al. 2023): fuse weight magnitudes with input
+activation norms. Our weights follow the y = x @ W convention (W: in x out),
+so activations scale ROWS: S_ij = |W_ij| * a_i with a_i = ||X_i||_2 over all
+calibration tokens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wanda_scores(W: jnp.ndarray, act_sq: jnp.ndarray) -> jnp.ndarray:
+    """W (m, n); act_sq (m,) accumulated sum of squared activations per
+    input feature. Returns the importance matrix S (m, n)."""
+    a = jnp.sqrt(jnp.maximum(act_sq.astype(jnp.float32), 0.0))
+    return jnp.abs(W.astype(jnp.float32)) * a[:, None]

@@ -1,0 +1,74 @@
+"""Fused CUR matmul Pallas TPU kernel: y = (x @ CU) @ R.
+
+TPU adaptation of the paper's inference hot path (DESIGN.md §3): after
+CURing, every compressed weight is applied as a low-rank chain. XLA would
+materialize the (M, r) intermediate in HBM between two GEMM dispatches;
+this kernel keeps it in VMEM:
+
+  grid = (M/bm, N/bn), j (N tiles) iterating fastest.
+  - CU (m, r) is small (r <= 512) and resident in VMEM for all tiles.
+  - at j == 0 the kernel computes t = x_tile @ CU once per M-tile into a
+    VMEM scratch accumulator (f32),
+  - every j computes y_tile = t @ R_tile on the MXU.
+
+Block sizes default to 128-aligned (MXU native). HBM traffic: x is read
+once per M-tile (not once per (i, j) pair), R once, y written once —
+bytes ~= M*m + m*r + r*N + M*N versus the unfused M*m + 2*M*r + r*N + M*N.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(x_ref, cu_ref, r_ref, o_ref, t_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        t_ref[...] = jnp.dot(
+            x_ref[...], cu_ref[...],
+            preferred_element_type=jnp.float32)
+
+    o_ref[...] = jnp.dot(
+        t_ref[...].astype(x_ref.dtype), r_ref[...],
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def cur_matmul(x, cu, r, *, bm: int = 256, bn: int = 256,
+               interpret: bool = False):
+    """x (M, m) @ cu (m, rk) @ r (rk, n) -> (M, n)."""
+    M, m = x.shape
+    rk = cu.shape[1]
+    n = r.shape[1]
+    bm = min(bm, M)
+    bn = min(bn, n)
+    assert M % bm == 0 and n % bn == 0, (M, n, bm, bn)
+    grid = (M // bm, n // bn)
+
+    scratch = (_VMEM((bm, rk), jnp.float32) if _VMEM is not None
+               else pl.MemorySpace.ANY)  # pragma: no cover
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, rk), lambda i, j: (0, 0)),
+            pl.BlockSpec((rk, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, n), x.dtype),
+        scratch_shapes=[scratch],
+        interpret=interpret,
+    )(x, cu, r)

@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for the fused CUR matmul.
+
+On TPU the Pallas kernel runs compiled; everywhere else (this CPU container)
+it runs in interpret mode — same kernel body, Python-evaluated per grid
+point — so correctness is validated against ``ref.py`` on any backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cur_matmul.cur_matmul import cur_matmul as _kernel_call
+from repro.kernels.cur_matmul.ref import cur_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def cur_matmul_op(x, cu, r, *, bm: int = 256, bn: int = 256):
+    """Fused (x @ CU) @ R. Accepts (..., m) inputs; flattens leading dims."""
+    lead = x.shape[:-1]
+    m = x.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, m)
+    bm_eff = bm if M % bm == 0 else M
+    n = r.shape[1]
+    bn_eff = bn if n % bn == 0 else n
+    y = _kernel_call(x2, cu, r, bm=bm_eff, bn=bn_eff,
+                     interpret=not _on_tpu())
+    return y.reshape(lead + (n,))

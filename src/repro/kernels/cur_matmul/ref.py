@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused CUR matmul kernel."""
+import jax.numpy as jnp
+
+
+def cur_matmul_ref(x, cu, r):
+    """y = (x @ CU) @ R. x (M, m); cu (m, rk); r (rk, n) -> (M, n)."""
+    t = x.astype(jnp.float32) @ cu.astype(jnp.float32)
+    return (t @ r.astype(jnp.float32)).astype(x.dtype)
+
+
+def cur_chain_ref(x, c, u, r):
+    """Unfolded healing-form chain: y = ((x @ C) @ U) @ R."""
+    t = x.astype(jnp.float32) @ c.astype(jnp.float32)
+    t = t @ u.astype(jnp.float32)
+    return (t @ r.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,115 @@
+"""Flash attention (GQA + causal + sliding window) Pallas TPU kernel.
+
+Online-softmax over KV tiles with f32 running (max, sum, acc) in VMEM
+scratch. Grid = (B, H, S/bq, S/bk) with the KV tile index innermost; the
+GQA mapping (q head h reads kv head h // G) lives in the K/V BlockSpec
+index maps, so no repeated-KV materialization. Causally dead (q, k) tile
+pairs are skipped with ``pl.when`` — on TPU the MXU never sees them, which
+is what recovers the ~2x causal FLOP saving over a masked dense scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, bq, bk, nk, causal, window):
+    i = pl.program_id(2)          # q tile
+    j = pl.program_id(3)          # kv tile
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i * bq
+    k_start = j * bk
+    # tile is live unless it is entirely in the causal future or entirely
+    # outside the sliding window
+    live = True
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window > 0:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, 0]                          # (bq, d)
+        k = k_ref[0, 0]                          # (bk, d)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kj <= qi
+        if window > 0:
+            mask &= kj > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q (B,H,S,d); k,v (B,K,S,d), H = K*G -> (B,H,S,d)."""
+    B, H, S, d = q.shape
+    K = k.shape[1]
+    G = H // K
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+        causal=causal, window=window)
+
+    scratch = ([_VMEM((bq, 1), jnp.float32),
+                _VMEM((bq, 1), jnp.float32),
+                _VMEM((bq, d), jnp.float32)] if _VMEM is not None else
+               [pl.MemorySpace.ANY] * 3)  # pragma: no cover
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the flash attention kernel (interpret mode off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       bq: int = 128, bk: int = 128):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           bq=bq, bk=bk, interpret=not _on_tpu())

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, optional
+sliding window)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,S,d); k,v (B,K,S,d) with H = K*G. Returns (B,H,S,d)."""
+    B, H, S, d = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, S, d)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    s = s * (d ** -0.5)
+    i = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window > 0:
+        mask &= i[None, :] > (i[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v)
+    return o.reshape(B, H, S, d)

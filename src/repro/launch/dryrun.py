@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, print memory/cost analysis, record roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  ... --cur            # structurally CUR-compressed variant (paper applied)
+  ... --out results.json
+
+The XLA_FLAGS line above MUST run before any other import so the host
+platform exposes 512 placeholder devices.
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config                      # noqa: E402
+from repro.configs.base import (                                  # noqa: E402
+    CURConfig, OptimizerConfig, SHAPES, TrainConfig, shape_applicable)
+from repro.dist import sharding as shd                            # noqa: E402
+from repro.launch import specs as sp                              # noqa: E402
+from repro.launch.mesh import make_production_mesh                # noqa: E402
+from repro.models.model import decode_step, loss_fn, prefill      # noqa: E402
+from repro.optim.adamw import AdamW                               # noqa: E402
+from repro.roofline import analysis as ra                         # noqa: E402
+from repro.train.train_loop import make_train_step                # noqa: E402
+
+
+def _named(specs, mesh):
+    return shd.to_named(specs, mesh)
+
+
+def _reduced_cfg(cfg, k: int):
+    """Clamp the scalable group's repeats to k; unrolled static-loop mode
+    (cost-compile fidelity: loop trips and causal tile skipping counted)."""
+    groups = tuple((pat, min(reps, k)) for pat, reps in cfg.groups)
+    n_layers = sum(len(pat) * reps for pat, reps in groups)
+    return cfg.replace(groups=groups, n_layers=n_layers,
+                       scan_layers=False, static_loops=True,
+                       attn_chunk=2048)
+
+
+def _scalable_reps(cfg) -> int:
+    """Repeats of the (single) scan-scalable group."""
+    rs = [reps for _, reps in cfg.groups if reps > 1]
+    assert len(rs) <= 1, "extrapolation assumes one scalable group"
+    return rs[0] if rs else 1
+
+
+def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int):
+    """Lower + compile one artifact. Returns (compiled, lower_s,
+    compile_s)."""
+    params = sp.param_specs(cfg)
+    if cur:
+        params = sp.structural_cur(params, cfg, CURConfig(r_max=256))
+    p_specs = shd.param_pspecs(params, cfg, mesh)
+    p_sh = _named(p_specs, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        # quantized moments for the >=100B configs (8-bit-Adam; DESIGN §4)
+        quant = cfg.param_count() > 1e11
+        opt = AdamW(OptimizerConfig(quantized_state=quant))
+        opt_state = jax.eval_shape(opt.init, params)
+        o_specs = shd.opt_state_pspecs(opt_state, cfg, mesh)
+        o_sh = _named(o_specs, mesh)
+        batch = sp.input_specs(cfg, shape)
+        b_specs = shd.batch_pspecs(cfg, shape, mesh)
+        b_sh = _named(b_specs, mesh)
+        tc = TrainConfig(microbatch=microbatch) if microbatch else None
+        step = make_train_step(cfg, opt, tc, mesh)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None))
+        lowered = jitted.lower(params, opt_state, batch)
+    elif shape.kind == "prefill":
+        cache = sp.cache_specs(cfg, shape)
+        c_specs = shd.cache_pspecs(cache, cfg, shape, mesh)
+        c_sh = _named(c_specs, mesh)
+        batch = sp.input_specs(cfg, shape)
+        batch.pop("labels")
+        b_specs = shd.batch_pspecs(cfg, shape, mesh)
+        b_specs.pop("labels")
+        b_sh = _named(b_specs, mesh)
+
+        def prefill_step(params, cache, batch):
+            return prefill(params, cfg, batch, cache, mesh)
+
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, c_sh, b_sh),
+                         out_shardings=(None, c_sh))
+        lowered = jitted.lower(params, cache, batch)
+    else:  # decode
+        cache = sp.cache_specs(cfg, shape)
+        c_specs = shd.cache_pspecs(cache, cfg, shape, mesh)
+        c_sh = _named(c_specs, mesh)
+        batch, pos = sp.decode_input_specs(cfg, shape)
+        b_specs, pos_spec = shd.decode_batch_pspecs(cfg, shape, mesh)
+        b_sh = _named(b_specs, mesh)
+        pos_sh = _named(pos_spec, mesh)
+
+        def serve_step(params, cache, batch, pos):
+            return decode_step(params, cfg, batch, cache, pos, mesh)
+
+        jitted = jax.jit(serve_step,
+                         in_shardings=(p_sh, c_sh, b_sh, pos_sh),
+                         out_shardings=(None, c_sh))
+        lowered = jitted.lower(params, cache, batch, pos)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _cost_triple(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    txt = compiled.as_text()
+    coll = ra.collective_bytes(txt)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(ra.essential_bytes(txt)),
+            coll)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               cur: bool = False, microbatch: int = 0,
+               verbose: bool = True, extrapolate: bool = True):
+    """Lower + compile one (arch, shape, mesh) cell.
+
+    XLA's cost_analysis counts while-loop bodies once, so the scanned
+    artifact under-reports FLOPs by the trip count. We therefore compile
+    three artifacts: the full scanned model (deliverable: must compile;
+    memory analysis; collective schedule) and two reduced unrolled
+    static-loop models (scalable group reps = 1 and 2) whose cost
+    difference is the exact per-layer-repeat cost:
+        total = f(1) + (R - 1) * (f(2) - f(1)).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(arch, shape):
+        return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                "cur": cur, "mesh": "2x16x16" if multi_pod else "16x16",
+                "reason": "full-attention arch at 500k (DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    compiled, t_lower, t_compile = _compile_cell(
+        cfg, shape, mesh, cur=cur, microbatch=microbatch)
+    mem = compiled.memory_analysis()
+    raw_flops, raw_bytes, raw_ess, raw_coll = _cost_triple(compiled)
+
+    R = _scalable_reps(cfg)
+    if extrapolate and R > 1:
+        c1, _, t1 = _compile_cell(_reduced_cfg(cfg, 1), shape, mesh,
+                                  cur=cur, microbatch=microbatch)
+        f1, b1, e1, coll1 = _cost_triple(c1)
+        c2, _, t2 = _compile_cell(_reduced_cfg(cfg, 2), shape, mesh,
+                                  cur=cur, microbatch=microbatch)
+        f2, b2, e2, coll2 = _cost_triple(c2)
+
+        def _extrap(x1, x2):
+            """x1 + (R-1)*(x2-x1), guarded: GSPMD occasionally reshards
+            the two reduced modules differently and the delta goes
+            negative — fall back to linear scaling of the 2-rep module."""
+            d = x2 - x1
+            if d <= 0:
+                return x2 * R / 2.0
+            return x1 + (R - 1) * d
+
+        flops = _extrap(f1, f2)
+        bytes_xla = _extrap(b1, b2)
+        bytes_ess = _extrap(e1, e2)
+        coll_total = _extrap(coll1["total"], coll2["total"])
+        coll_detail = {k: int(_extrap(coll1[k], coll2[k]))
+                       for k in coll1 if isinstance(coll1[k], int)}
+        cost_basis = "2pt-extrapolated-unrolled-static"
+        t_compile_extra = round(t1 + t2, 1)
+    else:
+        flops, bytes_xla, bytes_ess = raw_flops, raw_bytes, raw_ess
+        coll_total = raw_coll["total"]
+        coll_detail = {k: v for k, v in raw_coll.items()
+                       if isinstance(v, int)}
+        cost_basis = "direct"
+        t_compile_extra = 0.0
+
+    mflops = ra.model_flops(cfg, shape)
+    if cur:
+        # useful flops of the CUR-compressed model scale with its (smaller)
+        # parameter count — C/U/R chains replace dense matmuls
+        dense_n = sp.count_struct_params(sp.param_specs(cfg))
+        cur_n = sp.count_struct_params(
+            sp.structural_cur(sp.param_specs(cfg), cfg, CURConfig()))
+        mflops = mflops * (cur_n / dense_n)
+    roof = ra.Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=bytes_ess,
+        coll_bytes_per_device=coll_total,
+        model_flops_global=mflops,
+        compute_s=flops / ra.PEAK_FLOPS,
+        memory_s=bytes_ess / ra.HBM_BW,
+        collective_s=coll_total / ra.ICI_BW,
+        peak_mem_bytes=int(mem.temp_size_in_bytes
+                           + mem.argument_size_in_bytes),
+        coll_detail=coll_detail,
+    )
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "cur": cur, "status": "OK", "cost_basis": cost_basis,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "compile_extra_s": t_compile_extra,
+        "argument_gib_per_dev": round(
+            mem.argument_size_in_bytes / 2**30, 3),
+        "temp_gib_per_dev": round(mem.temp_size_in_bytes / 2**30, 3),
+        "output_gib_per_dev": round(mem.output_size_in_bytes / 2**30, 3),
+        "flops_per_dev": flops,
+        "raw_scanned_flops_per_dev": raw_flops,
+        "bytes_per_dev": bytes_ess,
+        "bytes_xla_per_dev": bytes_xla,
+        "coll_bytes_per_dev": coll_total,
+        "coll_detail": coll_detail,
+        "model_flops": roof.model_flops_global,
+        "compute_s": roof.compute_s,
+        "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s,
+        "dominant": roof.dominant,
+        "useful_flop_ratio": round(roof.useful_flop_ratio, 4),
+        "roofline_fraction": round(roof.roofline_fraction, 4),
+    }
+    if verbose:
+        print(f"  memory_analysis: args={result['argument_gib_per_dev']} "
+              f"temp={result['temp_gib_per_dev']} "
+              f"out={result['output_gib_per_dev']} GiB/dev")
+        print(f"  cost[{cost_basis}]: flops/dev={flops:.3e} "
+              f"bytes/dev={bytes_ess:.3e} (xla {bytes_xla:.3e}) "
+              f"coll/dev={coll_total:.3e}")
+        print(f"  roofline: compute={roof.compute_s*1e3:.1f}ms "
+              f"memory={roof.memory_s*1e3:.1f}ms "
+              f"collective={roof.collective_s*1e3:.1f}ms "
+              f"-> {roof.dominant}-bound, "
+              f"MFU-at-roof={roof.roofline_fraction:.2%}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cur", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="single compile per cell (multi-pod pass: proves "
+                         "sharding; roofline table is single-pod only)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = (f"{arch} x {shape} x "
+                       f"{'2x16x16' if mp else '16x16'}"
+                       f"{' [CUR]' if args.cur else ''}")
+                print(f"=== {tag}", flush=True)
+                try:
+                    r = lower_cell(arch, shape, multi_pod=mp, cur=args.cur,
+                                   microbatch=args.microbatch,
+                                   extrapolate=not args.no_extrapolate)
+                except Exception as e:  # noqa: BLE001 — record & continue
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "cur": args.cur, "status": "FAIL",
+                         "error": f"{type(e).__name__}: {e}"[:500]}
+                results.append(r)
+                print(f"  -> {r['status']}", flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    print(f"\n{n_ok} OK, {n_skip} SKIP, "
+          f"{len(results) - n_ok - n_skip} FAIL / {len(results)} cells")
+    return results
+
+
+if __name__ == "__main__":
+    main()

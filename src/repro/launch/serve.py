@@ -1,0 +1,60 @@
+"""Serving entry point: batched generation over a (optionally
+CUR-compressed) model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+      --batch 4 --new-tokens 16 [--cur-layers 2]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.serve.engine import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--cur-layers", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{args.arch} uses the embeddings stub")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                seq_len=args.prompt_len,
+                                global_batch=args.batch))
+    prompts = ds.batch_at(0)["tokens"]
+
+    if args.cur_layers:
+        calib = calibrate(params, cfg, [ds.batch_at(1)])
+        params, cfg, info = compress_model(
+            params, cfg,
+            CURConfig(r_max=32, n_compress_layers=args.cur_layers,
+                      fold_u=True),
+            calib)
+        print(f"CUR-compressed {info.layers} "
+              f"({info.params_saved/1e3:.0f}k params saved)")
+
+    t0 = time.perf_counter()
+    out = generate(params, cfg, prompts, args.new_tokens,
+                   temperature=args.temperature)
+    dt = time.perf_counter() - t0
+    print(f"generated {out.tokens.size} tokens in {dt:.2f}s "
+          f"({out.tokens.size/dt:.1f} tok/s)")
+    print(out.tokens[:2])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation. The dry-run lowers against these.
+
+Also: structural CUR transformation of a parameter *shape* pytree — the
+paper's compression applied at dry-run scale (every eligible weight in
+every layer becomes C/U0/dU/R stand-ins with Eq.-2 ranks), so the
+compressed model's distributed roofline is measurable without real weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CURConfig, ModelConfig, ShapeConfig
+from repro.core.cur import rank_for
+from repro.models.model import init_cache, init_params
+
+S = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for a train/prefill step: tokens or stub embeddings."""
+    B, L = shape.global_batch, shape.seq_len
+    batch = {"labels": S((B, L), jnp.int32)}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = S((B, L), jnp.int32)
+    else:
+        batch["embeds"] = S((B, L, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(batch, pos) for one decode step with a seq_len-deep cache."""
+    B = shape.global_batch
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": S((B, 1), jnp.int32)}
+    else:
+        batch = {"embeds": S((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))}
+    pos = S((B, 1), jnp.int32)
+    return batch, pos
+
+
+def param_specs(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# structural CUR (dry-run compression)
+# ---------------------------------------------------------------------------
+
+def _cur_struct(leaf: S, r_max: int) -> dict:
+    """Dense weight struct (..., m, n) -> CUR dict of structs."""
+    *lead, m, n = leaf.shape
+    r = rank_for(m, n, r_max)
+    lead = tuple(lead)
+    dt = leaf.dtype
+    return {
+        "C": S(lead + (m, r), dt),
+        "U0": S(lead + (r, r), jnp.float32),
+        "dU": S(lead + (r, r), jnp.float32),
+        "R": S(lead + (r, n), dt),
+    }
+
+
+def structural_cur(params, cfg: ModelConfig, cur_cfg: CURConfig):
+    """Replace every CUR-target weight (all layers) with CUR stand-ins.
+    Group stacking is preserved (uniform ranks), so scanned HLO stays
+    compact. Returns the new params pytree (structs or arrays untouched
+    elsewhere)."""
+    new = {k: v for k, v in params.items() if k != "groups"}
+    new["groups"] = []
+    for gi, (pattern, reps) in enumerate(cfg.groups):
+        group = []
+        for pi, spec in enumerate(pattern):
+            block = dict(params["groups"][gi][pi])
+            for t in cfg.cur_targets:
+                if t not in block:
+                    continue
+                leaf = block[t]
+                if not hasattr(leaf, "shape"):
+                    continue
+                m, n = leaf.shape[-2], leaf.shape[-1]
+                r = rank_for(m, n, cur_cfg.r_max)
+                if m * r + r * r + r * n >= m * n:
+                    continue  # Eq. 2: no saving, keep dense
+                block[t] = _cur_struct(leaf, cur_cfg.r_max)
+            group.append(block)
+        new["groups"].append(group)
+    return new
+
+
+def count_struct_params(tree) -> int:
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree.leaves(tree) if hasattr(l, "shape"))

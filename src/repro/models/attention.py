@@ -1,0 +1,300 @@
+"""GQA attention with RoPE: dense, chunked-flash, banded-local and decode
+paths.
+
+Path selection (``attn_forward``):
+  - S <= DENSE_MAX: dense masked softmax (smoke tests, short seqs).
+  - full attention, long S: nested chunked online-softmax (flash-style) —
+    memory O(chunk^2), lowers to compact scanned HLO for the dry-run. The
+    Pallas TPU kernel in ``repro.kernels.flash_attention`` implements the
+    same math for real hardware.
+  - sliding-window attention, long S: banded path — each query chunk attends
+    to a static (window + chunk)-wide KV slice, structurally skipping
+    out-of-window chunks (sub-quadratic compute AND memory).
+
+Decode (``attn_decode``): one query token vs a KV cache; local layers use a
+ring buffer of size ``window`` so 500k-token contexts keep O(window) state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_w, apply_rope, rms_norm
+
+DENSE_MAX = 2048     # use dense softmax at or below this sequence length
+CHUNK = 512          # flash chunk (query and kv)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def qkv_project(x, p, cfg, positions):
+    """x (B,S,D) -> q (B,S,H,hd), k,v (B,S,K,hd), roped."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = apply_w(x, p["wq"]).reshape(B, S, H, hd)
+    k = apply_w(x, p["wk"]).reshape(B, S, K, hd)
+    v = apply_w(x, p["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group_q(q, n_kv):
+    """(B,S,H,hd) -> (B,S,K,G,hd) grouped for GQA."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+# ---------------------------------------------------------------------------
+# dense path
+# ---------------------------------------------------------------------------
+
+def _dense_attn(q, k, v, q_pos, kv_pos, window: int, scale: float):
+    """q (B,Sq,K,G,hd); k,v (B,Skv,K,hd); positions (B,Sq)/(B,Skv)."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k).astype(jnp.float32) * scale
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]            # causal
+    if window > 0:
+        mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# chunked flash path (full causal)
+# ---------------------------------------------------------------------------
+
+def _flash_chunk_update(carry, s, v_chunk):
+    """Online softmax update. carry: (m, l, acc); s: (B,K,G,cq,ck) f32."""
+    m, l, acc = carry
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bkgqt,btkd->bkgqd", p.astype(v_chunk.dtype), v_chunk
+    ).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _flash_attn(q, k, v, q_pos, kv_pos, scale: float, chunk: int,
+                static: bool = False):
+    """Nested-chunk online softmax. q (B,Sq,K,G,hd), k/v (B,Skv,K,hd).
+
+    ``static=True`` unrolls both chunk loops in Python and *skips* causally
+    dead (q, k) chunk pairs — the control flow the Pallas kernel executes
+    on TPU (pl.when), used by the dry-run cost compiles so HLO FLOPs count
+    loop trips and reflect causal tile skipping."""
+    B, Sq, K, G, hd = q.shape
+    Skv = k.shape[1]
+    cq = min(chunk, Sq)
+    ck = min(chunk, Skv)
+    nq, nk = Sq // cq, Skv // ck
+    qc = q.reshape(B, nq, cq, K, G, hd)
+    qp = q_pos.reshape(B, nq, cq)
+    kc = k.reshape(B, nk, ck, K, hd)
+    vc = v.reshape(B, nk, ck, K, hd)
+    kp = kv_pos.reshape(B, nk, ck)
+
+    def chunk_scores(qi, qpi, ki, kpi):
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qi, ki).astype(jnp.float32)
+        s = s * scale
+        mask = kpi[:, None, :] <= qpi[:, :, None]
+        return jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+
+    def per_qchunk_scan(qi, qpi):
+        m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, hd), jnp.float32)
+
+        def body(carry, xs):
+            ki, vi, kpi = xs
+            s = chunk_scores(qi, qpi, ki, kpi)
+            return _flash_chunk_update(carry, s, vi), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kp.swapaxes(0, 1)))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 3, 1, 2, 4)     # -> (B,cq,K,G,hd)
+
+    if static:
+        outs = []
+        for i in range(nq):
+            qi, qpi = qc[:, i], qp[:, i]
+            carry = (jnp.full((B, K, G, cq), NEG_INF, jnp.float32),
+                     jnp.zeros((B, K, G, cq), jnp.float32),
+                     jnp.zeros((B, K, G, cq, hd), jnp.float32))
+            last_live = (i * cq + cq - 1) // ck     # causal skip beyond
+            for j in range(last_live + 1):
+                s = chunk_scores(qi, qpi, kc[:, j], kp[:, j])
+                carry = _flash_chunk_update(carry, s, vc[:, j])
+            m, l, acc = carry
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            outs.append(o.transpose(0, 3, 1, 2, 4))
+        o = jnp.concatenate(outs, axis=1)
+        return o.reshape(B, Sq, K, G, hd).astype(q.dtype)
+
+    o = jax.lax.map(lambda t: per_qchunk_scan(t[0], t[1]),
+                    (qc.swapaxes(0, 1), qp.swapaxes(0, 1)))
+    o = o.swapaxes(0, 1).reshape(B, Sq, K, G, hd)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# banded local path (sliding window)
+# ---------------------------------------------------------------------------
+
+def _banded_attn(q, k, v, q_pos, kv_pos, window: int, scale: float,
+                 chunk: int, static: bool = False):
+    """Sliding-window attention: query chunk i attends to the static KV
+    slice [i*cq - band, i*cq + cq). band = ceil(window/cq)*cq.
+    Structurally sub-quadratic: compute O(S * (window + chunk))."""
+    B, Sq, K, G, hd = q.shape
+    cq = min(chunk, Sq)
+    nq = Sq // cq
+    band = -(-window // cq) * cq                     # multiple of cq >= window
+    width = band + cq
+    # pad KV on the left by `band` so every slice is in-bounds & static-size
+    kpad = jnp.pad(k, ((0, 0), (band, 0), (0, 0), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (band, 0), (0, 0), (0, 0)))
+    # padded positions: left-pad with large negative so mask kills them
+    ppad = jnp.pad(kv_pos, ((0, 0), (band, 0)), constant_values=-(10 ** 9))
+
+    qc = q.reshape(B, nq, cq, K, G, hd)
+    qp = q_pos.reshape(B, nq, cq)
+
+    def per_qchunk(i, qi, qpi):
+        start = i * cq                               # offset into padded kv
+        ks = jax.lax.dynamic_slice_in_dim(kpad, start, width, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vpad, start, width, axis=1)
+        ps = jax.lax.dynamic_slice_in_dim(ppad, start, width, axis=1)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qi, ks).astype(jnp.float32)
+        s = s * scale
+        mask = (ps[:, None, :] <= qpi[:, :, None]) & (
+            ps[:, None, :] > qpi[:, :, None] - window)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(vs.dtype), vs)
+        return o
+
+    if static:
+        outs = [per_qchunk(i, qc[:, i], qp[:, i]) for i in range(nq)]
+        o = jnp.concatenate(outs, axis=1)
+        return o.reshape(B, Sq, K, G, hd).astype(q.dtype)
+    o = jax.lax.map(
+        lambda t: per_qchunk(t[0], t[1], t[2]),
+        (jnp.arange(nq), qc.swapaxes(0, 1), qp.swapaxes(0, 1)))
+    return o.swapaxes(0, 1).reshape(B, Sq, K, G, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def _mix(qg, k, v, positions, window, scale, cfg=None):
+    S = qg.shape[1]
+    static = bool(cfg is not None and cfg.static_loops)
+    chunk = cfg.attn_chunk if cfg is not None else CHUNK
+    if S <= DENSE_MAX and not static:
+        return _dense_attn(qg, k, v, positions, positions, window, scale)
+    if window > 0:
+        return _banded_attn(qg, k, v, positions, positions, window, scale,
+                            chunk, static)
+    return _flash_attn(qg, k, v, positions, positions, scale, chunk, static)
+
+
+def attn_forward(x, p, cfg, positions, *, window: int = 0):
+    """Full-sequence attention (train). x (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q, k, v = qkv_project(x, p, cfg, positions)
+    qg = _group_q(q, K)
+    o = _mix(qg, k, v, positions, window, scale, cfg)
+    o = o.reshape(B, S, H * hd)
+    return apply_w(o, p["wo"])
+
+
+def attn_prefill(x, p, cfg, positions, cache, *, window: int = 0):
+    """Forward + KV-cache fill. Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q, k, v = qkv_project(x, p, cfg, positions)
+    qg = _group_q(q, K)
+    o = _mix(qg, k, v, positions, window, scale, cfg)
+    o = o.reshape(B, S, H * hd)
+    new_cache = attn_fill_cache(cache, k, v, positions, window)
+    return apply_w(o, p["wo"]), new_cache
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, window: int, dtype):
+    """KV cache for one attention layer. Local layers: ring buffer."""
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = min(max_len, window) if window > 0 else max_len
+    return {
+        "k": jnp.zeros((batch, L, K, hd), dtype),
+        "v": jnp.zeros((batch, L, K, hd), dtype),
+        # absolute position of each slot (-1 = empty)
+        "pos": jnp.full((batch, L), -1, jnp.int32),
+    }
+
+
+def attn_fill_cache(cache, k, v, positions, window: int):
+    """Write a full prefill's K/V into the cache (last `L` tokens for local
+    ring buffers)."""
+    L = cache["k"].shape[1]
+    S = k.shape[1]
+    if S <= L:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)
+        cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions, 0, 1)
+        return cache
+    # ring buffer: keep the trailing window, placed at slot pos % L
+    kt, vt, pt = k[:, -L:], v[:, -L:], positions[:, -L:]
+    slots = pt % L                                     # (B, L)
+    b_idx = jnp.arange(k.shape[0])[:, None]
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[b_idx, slots].set(kt)
+    cache["v"] = cache["v"].at[b_idx, slots].set(vt)
+    cache["pos"] = cache["pos"].at[b_idx, slots].set(pt)
+    return cache
+
+
+def attn_decode(x, p, cfg, cache, pos, *, window: int = 0):
+    """Single-token decode. x (B,1,D); pos (B,1) absolute positions."""
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q, k, v = qkv_project(x, p, cfg, pos)             # (B,1,·,hd)
+    L = cache["k"].shape[1]
+    slot = (pos[:, 0] % L) if window > 0 else pos[:, 0]
+    b_idx = jnp.arange(B)
+    ck = cache["k"].at[b_idx, slot].set(k[:, 0])
+    cv = cache["v"].at[b_idx, slot].set(v[:, 0])
+    cp = cache["pos"].at[b_idx, slot].set(pos[:, 0])
+    qg = _group_q(q, K)                               # (B,1,K,G,hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, ck).astype(jnp.float32) * scale
+    valid = (cp >= 0) & (cp <= pos[:, :1])
+    if window > 0:
+        valid &= cp > (pos[:, :1] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", pr.astype(cv.dtype), cv)
+    o = o.reshape(B, 1, H * hd)
+    out = apply_w(o, p["wo"])
+    return out, {"k": ck, "v": cv, "pos": cp}

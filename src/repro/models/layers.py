@@ -1,0 +1,171 @@
+"""Shared low-level layers: norms, rotary embeddings, initializers, and the
+CUR-aware weight application helper used by every matmul in the framework.
+
+A "weight" anywhere in the model param tree is either a plain array or a
+CUR dict produced by ``repro.core.compress``:
+
+    {"C": (m, r), "U0": (r, r), "dU": (r, r), "R": (r, n)}     # healing form
+    {"CU": (m, r), "R": (r, n)}                                # folded form
+
+``apply_w(x, w)`` dispatches transparently, so compressed and dense layers
+share all model code — the paper's structure-preservation property made
+executable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# CUR-aware matmul
+# ---------------------------------------------------------------------------
+
+def is_cur(w) -> bool:
+    return isinstance(w, dict) and ("C" in w or "CU" in w)
+
+
+def is_adapter(w) -> bool:
+    return isinstance(w, dict) and "base" in w
+
+
+def cur_materialize(w) -> jnp.ndarray:
+    """Reconstruct the dense approximation C @ U @ R (for analysis/tests)."""
+    if "CU" in w:
+        return w["CU"] @ w["R"]
+    u = w["U0"] + w["dU"]
+    return w["C"] @ u @ w["R"]
+
+
+def _mora_apply(x, M, n_out: int):
+    """MoRA (Jiang et al. 2024) square-matrix adapter: compress input
+    segments by summation, apply M (r x r), tile output to n_out."""
+    r = M.shape[0]
+    m = x.shape[-1]
+    pad = (-m) % r
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xc = xp.reshape(xp.shape[:-1] + (-1, r)).sum(axis=-2)
+    y = xc @ M.astype(x.dtype)
+    reps = -(-n_out // r)
+    out = jnp.tile(y, (1,) * (y.ndim - 1) + (reps,))[..., :n_out]
+    return out
+
+
+def apply_w(x: jnp.ndarray, w) -> jnp.ndarray:
+    """x @ W for dense, CUR-factorized, or PEFT-adapted W.
+    x: (..., m) -> (..., n)."""
+    if is_adapter(w):
+        y = apply_w(x, w["base"])
+        if "lora_A" in w:                      # LoRA: + x A B
+            y = y + (x @ w["lora_A"].astype(x.dtype)) @ \
+                w["lora_B"].astype(x.dtype)
+        elif "mora" in w:                      # MoRA square adapter
+            y = y + _mora_apply(x, w["mora"], y.shape[-1])
+        elif "cC" in w:                        # CURLoRA: + x C U R (U trained)
+            y = y + ((x @ w["cC"].astype(x.dtype))
+                     @ w["cU"].astype(x.dtype)) @ w["cR"].astype(x.dtype)
+        return y
+    if not is_cur(w):
+        return x @ w
+    if "CU" in w:
+        return (x @ w["CU"]) @ w["R"]
+    u = (w["U0"] + w["dU"]).astype(x.dtype)
+    t = x @ w["C"].astype(x.dtype)
+    t = t @ u
+    return t @ w["R"].astype(x.dtype)
+
+
+def w_shape(w):
+    """(m, n) logical shape of a dense-or-CUR weight."""
+    if not is_cur(w):
+        return w.shape
+    c = w["CU"] if "CU" in w else w["C"]
+    return (c.shape[0], w["R"].shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale=None, eps: float = 1e-5):
+    """f32 statistics, bf16 data path. Only the (…, 1) variance is f32 —
+    a full f32 (B,S,D) intermediate makes XLA hoist the f32 convert above
+    the tensor-parallel all-reduces and doubles their payload (§Perf
+    iteration 1)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = x * inv
+    if scale is not None:
+        y = y * scale.astype(x.dtype)
+    return y
+
+
+def layer_norm(x, scale=None, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = (x - mu.astype(x.dtype)) * inv
+    if scale is not None:
+        y = y * scale.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y
+
+
+def norm(x, params: Optional[dict], cfg) -> jnp.ndarray:
+    """Config-dispatched norm. ``params`` may be None (non-parametric)."""
+    scale = params.get("scale") if params else None
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, scale, None, cfg.norm_eps)
+    return rms_norm(x, scale, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, m: int, n: int, dtype) -> jnp.ndarray:
+    """Scaled truncated-normal (fan-in) initializer."""
+    std = 1.0 / math.sqrt(m)
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (m, n), jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_init(key, v: int, d: int, dtype) -> jnp.ndarray:
+    w = jax.random.normal(key, (v, d), jnp.float32) * 0.02
+    return w.astype(dtype)

@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside fixed-size chunks, linear recurrence between chunks (a
+``lax.scan`` carrying the (nh, hp, N) state). Decode is the O(1) recurrent
+update. TPU adaptation: the pairwise intra-chunk decay tensor
+(B, nc, c, c, nh) is materialized per layer — with heads TP-sharded over
+'model' this stays comfortably inside HBM, and chunk=c aligns with MXU
+tiling (c is a multiple of 128 at production scale).
+
+Projections are split (w_z, w_x, w_B, w_C, w_dt rather than one fused
+in_proj) so tensor-parallel sharding of the head dims never slices across
+semantic boundaries; CURing targets w_x (the pre-SiLU branch — DESIGN §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_w, rms_norm
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C), w (K,C), b (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4); unrolled adds beat lax.conv on TPU
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,nh,hp) inputs per head; dt: (B,S,nh) positive step sizes;
+    A: (nh,) negative decay rates; Bm/Cm: (B,S,N) shared input/output
+    projections (single group). Returns (y (B,S,nh,hp), final_state
+    (B,nh,hp,N)).
+    """
+    Bsz, S, nh, hp = xh.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        # dt = 0 on padded steps: dA = 0 -> state unchanged, increment 0,
+        # and trailing outputs are discarded below
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_orig, S = S, S + pad
+    nc = S // c
+    f32 = jnp.float32
+
+    x_c = xh.reshape(Bsz, nc, c, nh, hp).astype(f32)
+    dt_c = dt.reshape(Bsz, nc, c, nh).astype(f32)
+    B_c = Bm.reshape(Bsz, nc, c, N).astype(f32)
+    C_c = Cm.reshape(Bsz, nc, c, N).astype(f32)
+
+    dA = dt_c * A.astype(f32)                            # (B,nc,c,nh) <= 0
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # ---- intra-chunk (diagonal blocks) ----
+    CB = jnp.einsum("bzin,bzjn->bzij", C_c, B_c)         # (B,nc,c,c)
+    decay = jnp.exp(dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :])
+    ii = jnp.arange(c)
+    causal = (ii[:, None] >= ii[None, :])                # (c,c)
+    W = CB[..., None] * decay * dt_c[:, :, None, :, :]
+    W = jnp.where(causal[None, None, :, :, None], W, 0.0)
+    y_diag = jnp.einsum("bzijh,bzjhp->bzihp", W, x_c)
+
+    # ---- chunk summaries: state gathered by each chunk ----
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B,nc,c,nh)
+    states = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn",
+                        B_c, decay_states * dt_c, x_c)     # (B,nc,nh,hp,N)
+
+    # ---- inter-chunk recurrence ----
+    dA_sum = dA_cum[:, :, -1, :]                           # (B,nc,nh)
+    h0 = (jnp.zeros((Bsz, nh, hp, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(h, zs):
+        st, g = zs                                         # (B,nh,hp,N),(B,nh)
+        h_new = h * jnp.exp(g)[:, :, None, None] + st
+        return h_new, h                                    # emit entering state
+
+    hT, h_in = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), dA_sum.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                             # (B,nc,nh,hp,N)
+
+    # ---- inter-chunk contribution ----
+    y_off = jnp.einsum("bzin,bzhpn->bzihp", C_c, h_in)
+    y_off = y_off * jnp.exp(dA_cum)[..., None]
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hp)
+    if pad:
+        y = y[:, :S_orig]
+    return y.astype(xh.dtype), hT
+
+
+def mamba_forward(x, p, cfg, *, return_state: bool = False):
+    """Mamba-2 block. x (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+
+    z = apply_w(x, p["w_z"])                               # (B,S,di)
+    xb = apply_w(x, p["w_x"])
+    Bm = apply_w(x, p["w_B"])                              # (B,S,N)
+    Cm = apply_w(x, p["w_C"])
+    dt = apply_w(x, p["w_dt"])                             # (B,S,nh)
+
+    xb = jax.nn.silu(_causal_conv(xb, p["conv_x"], p["conv_x_b"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"], p["conv_B_b"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"], p["conv_C_b"]))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (nh,)
+
+    xh = xb.reshape(B, S, nh, hp)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_z"]["scale"], cfg.norm_eps)
+    out = apply_w(y, p["w_out"])
+    if return_state:
+        return out, state
+    return out
+
+
+def mamba_prefill(x, p, cfg):
+    """Forward + recurrent-cache capture. Returns (out, cache)."""
+    B, S, D = x.shape
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+
+    z = apply_w(x, p["w_z"])
+    xb0 = apply_w(x, p["w_x"])
+    Bm0 = apply_w(x, p["w_B"])
+    Cm0 = apply_w(x, p["w_C"])
+    dt = apply_w(x, p["w_dt"])
+
+    def tail(a):  # last K-1 raw pre-conv inputs (left-padded if S < K-1)
+        pad = max(0, (K - 1) - S)
+        ap = jnp.pad(a, ((0, 0), (pad, 0), (0, 0)))
+        return ap[:, -(K - 1):, :]
+
+    cache = {"conv_x": tail(xb0), "conv_B": tail(Bm0), "conv_C": tail(Cm0)}
+
+    xb = jax.nn.silu(_causal_conv(xb0, p["conv_x"], p["conv_x_b"]))
+    Bm = jax.nn.silu(_causal_conv(Bm0, p["conv_B"], p["conv_B_b"]))
+    Cm = jax.nn.silu(_causal_conv(Cm0, p["conv_C"], p["conv_C_b"]))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xb.reshape(B, S, nh, hp)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    cache["state"] = state
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_z"]["scale"], cfg.norm_eps)
+    return apply_w(y, p["w_out"]), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    di, N, nh, hp = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                     cfg.ssm_head_dim)
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, N), dtype),
+        "state": jnp.zeros((batch, nh, hp, N), jnp.float32),
+    }
+
+
+def _conv_step(x_t, cache, w, b):
+    """x_t (B,C); cache (B,K-1,C) last inputs. Returns (y_t, new cache)."""
+    window = jnp.concatenate([cache, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:, :]
+
+
+def mamba_decode(x, p, cfg, cache):
+    """Single-token recurrent update. x (B,1,D) -> (B,1,D), new cache."""
+    B = x.shape[0]
+    di, N, nh, hp = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                     cfg.ssm_head_dim)
+    xt = x[:, 0, :]
+    z = apply_w(xt, p["w_z"])
+    xb = apply_w(xt, p["w_x"])
+    Bm = apply_w(xt, p["w_B"])
+    Cm = apply_w(xt, p["w_C"])
+    dt = apply_w(xt, p["w_dt"])
+
+    xb, c_x = _conv_step(xb, cache["conv_x"], p["conv_x"], p["conv_x_b"])
+    Bm, c_B = _conv_step(Bm, cache["conv_B"], p["conv_B"], p["conv_B_b"])
+    Cm, c_C = _conv_step(Cm, cache["conv_C"], p["conv_C"], p["conv_C_b"])
+    xb, Bm, Cm = jax.nn.silu(xb), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                          # (B,nh)
+
+    xh = xb.reshape(B, nh, hp).astype(jnp.float32)
+    inc = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    state = cache["state"] * dA[:, :, None, None] + inc
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_z"]["scale"], cfg.norm_eps)
+    out = apply_w(y, p["w_out"])[:, None, :]
+    return out, {"conv_x": c_x, "conv_B": c_B, "conv_C": c_C, "state": state}

@@ -1,0 +1,242 @@
+"""Mixture-of-Experts channel mixer.
+
+Three implementations, selected by ``cfg.moe_impl`` and mesh availability:
+
+  - ``dense``: every expert applied to every token, gated by the top-k
+    routing weights. O(T·E·D·F) — only for smoke tests AND as the oracle
+    the distributed paths are verified against.
+
+  - ``a2a`` with E % model_axis == 0 (kimi 384e, jamba 16e): production
+    expert parallelism. Tokens are sequence-sharded over the 'model' axis,
+    sorted by destination expert, packed into fixed-capacity per-device
+    buffers, exchanged with ``lax.all_to_all``, processed by the local
+    expert slice as batched GEMMs, and returned by a second all-to-all.
+    Capacity overflow tokens are dropped (GShard semantics); the residual
+    connection carries them.
+
+  - ``a2a`` with E < model_axis (mixtral 8e over 16): megatron-style
+    expert-TP. Every device holds all experts with the intermediate dim
+    F sharded over 'model'; dispatch is local (sort + capacity buffer),
+    outputs are combined locally then psum-reduced over 'model'.
+
+Routing: softmax-then-top-k with renormalized gates (Mixtral convention).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import act_fn
+from repro.models.mlp import mlp_forward
+
+try:  # JAX >= 0.6 public API
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # pragma: no cover - older JAX
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# routing helpers
+# ---------------------------------------------------------------------------
+
+def route(xt, router, k):
+    """xt (T,D) -> (gates (T,k) f32, experts (T,k) i32)."""
+    logits = (xt @ router.astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    return topv, topi
+
+
+def _rank_within_expert(fe):
+    """For each assignment (sorted arbitrary order), its occurrence rank
+    within its expert id. O(A log A) — no (A, E) one-hot materialized."""
+    A = fe.shape[0]
+    order = jnp.argsort(fe, stable=True)
+    fe_s = fe[order]
+    idx = jnp.arange(A)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), fe_s[1:] != fe_s[:-1]])
+    start_pos = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, -1))
+    rank_s = idx - start_pos
+    rank = jnp.zeros((A,), jnp.int32).at[order].set(rank_s.astype(jnp.int32))
+    return rank
+
+
+def _expert_mm(h, w):
+    """Batched expert matmul supporting CUR-factorized expert weights.
+    h (E,C,D); w dense (E,D,F) or {"C","U0","dU","R"}/{"CU","R"} stacks."""
+    if isinstance(w, dict) and ("C" in w or "CU" in w):
+        if "CU" in w:
+            t = jnp.einsum("ecd,edr->ecr", h, w["CU"].astype(h.dtype))
+        else:
+            u = (w["U0"] + w["dU"]).astype(h.dtype)
+            t = jnp.einsum("ecd,edr->ecr", h, w["C"].astype(h.dtype))
+            t = jnp.einsum("ecr,erk->eck", t, u)
+        return jnp.einsum("ecr,erf->ecf", t, w["R"].astype(h.dtype))
+    return jnp.einsum("ecd,edf->ecf", h, w)
+
+
+def _expert_ffn(h, wg, wu, wd, act):
+    """h (E,C,D) x weights (E,D,F)/(E,F,D) -> (E,C,D)."""
+    g = act(_expert_mm(h, wg))
+    u = _expert_mm(h, wu)
+    return jnp.einsum("ecf,efd->ecd", g * u, wd)
+
+
+# ---------------------------------------------------------------------------
+# dense path (oracle / smoke)
+# ---------------------------------------------------------------------------
+
+def moe_dense(x, p, cfg):
+    B, S, D = x.shape
+    T = B * S
+    k = cfg.n_experts_per_tok
+    act = act_fn(cfg.mlp_act)
+    xt = x.reshape(T, D)
+    gates, experts = route(xt, p["router"], k)
+    # all-experts compute, gather selected
+    g = act(jnp.einsum("td,edf->tef", xt, p["w_gate"]))
+    u = jnp.einsum("td,edf->tef", xt, p["w_up"])
+    y = jnp.einsum("tef,efd->ted", g * u, p["w_down"])      # (T,E,D)
+    sel = jnp.take_along_axis(y, experts[:, :, None], axis=1)  # (T,k,D)
+    out = (sel * gates[:, :, None].astype(sel.dtype)).sum(axis=1)
+    if cfg.n_shared_experts:
+        out = out + mlp_forward(xt, p["shared"], cfg)
+    return out.reshape(B, S, D)
+
+
+# ---------------------------------------------------------------------------
+# distributed paths (shard_map over the mesh)
+# ---------------------------------------------------------------------------
+
+def _dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _moe_body_a2a(xs, router, wg, wu, wd, *, cfg, n):
+    """Expert-parallel body. xs (B,S_loc,D); wg/wu/wd (E_loc,D,F)."""
+    k = cfg.n_experts_per_tok
+    E = cfg.n_experts
+    E_loc = E // n
+    act = act_fn(cfg.mlp_act)
+    B, S, D = xs.shape
+    T = B * S
+    xt = xs.reshape(T, D)
+    gates, experts = route(xt, router, k)
+    A = T * k
+    fe = experts.reshape(-1)
+    fg = gates.reshape(-1)
+    ft = jnp.repeat(jnp.arange(T), k)
+    rank = _rank_within_expert(fe)
+    capE = max(1, math.ceil(A * cfg.capacity_factor / E))
+    capB = E_loc * capE
+    dst = fe // E_loc
+    slot = (fe % E_loc) * capE + rank
+    keep = rank < capE
+    slot_eff = jnp.where(keep, slot, capB)               # capB = drop
+    send = jnp.zeros((n, capB, D), xs.dtype).at[dst, slot_eff].set(
+        xt[ft], mode="drop")
+    recv = jax.lax.all_to_all(send, "model", 0, 0, tiled=True)
+    # slot layout per source: (E_loc, capE); regroup by local expert
+    h = recv.reshape(n, E_loc, capE, D).transpose(1, 0, 2, 3)
+    h = h.reshape(E_loc, n * capE, D)
+    y = _expert_ffn(h, wg, wu, wd, act)
+    back = y.reshape(E_loc, n, capE, D).transpose(1, 0, 2, 3)
+    back = back.reshape(n, capB, D)
+    ret = jax.lax.all_to_all(back, "model", 0, 0, tiled=True)
+    y_a = ret[dst, jnp.clip(slot_eff, 0, capB - 1)]
+    y_a = jnp.where(keep[:, None], y_a, 0)
+    y_a = y_a * fg[:, None].astype(y_a.dtype)
+    out = jax.ops.segment_sum(y_a, ft, num_segments=T)
+    return out.reshape(B, S, D)
+
+
+def _moe_body_tp(xs, router, wg, wu, wd, *, cfg):
+    """Expert-TP body (E < model axis). xs (B,S,D) replicated over 'model';
+    wg/wu (E,D,F_loc), wd (E,F_loc,D). Output psum over 'model'."""
+    k = cfg.n_experts_per_tok
+    E = cfg.n_experts
+    act = act_fn(cfg.mlp_act)
+    B, S, D = xs.shape
+    T = B * S
+    xt = xs.reshape(T, D)
+    gates, experts = route(xt, router, k)
+    A = T * k
+    fe = experts.reshape(-1)
+    fg = gates.reshape(-1)
+    ft = jnp.repeat(jnp.arange(T), k)
+    rank = _rank_within_expert(fe)
+    capE = max(1, math.ceil(A * cfg.capacity_factor / E))
+    keep = rank < capE
+    slot_eff = jnp.where(keep, rank, capE)
+    buf = jnp.zeros((E, capE + 1, D), xs.dtype).at[fe, slot_eff].set(
+        xt[ft], mode="drop")[:, :capE]
+    y = _expert_ffn(buf, wg, wu, wd, act)               # partial over F_loc
+    y_a = y[fe, jnp.clip(slot_eff, 0, capE - 1)]
+    y_a = jnp.where(keep[:, None], y_a, 0) * fg[:, None].astype(xs.dtype)
+    out = jax.ops.segment_sum(y_a, ft, num_segments=T)
+    out = jax.lax.psum(out, "model")
+    return out.reshape(B, S, D)
+
+
+def moe_forward(x, p, cfg, mesh=None):
+    """Dispatch on impl + mesh. x (B,S,D) -> (B,S,D)."""
+    if cfg.moe_impl == "dense" or mesh is None:
+        return moe_dense(x, p, cfg)
+    n = mesh.shape["model"]
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    E = cfg.n_experts
+    B = x.shape[0]
+    # small/indivisible batches (long-context B=1) replicate over 'data'
+    b_ax = dp if (B % dp_size == 0 and B >= dp_size) else None
+    # a2a needs the sequence dim divisible by the model axis (it shards
+    # tokens over 'model'); decode steps (S == 1) use the TP body instead.
+    fsdp_layout = getattr(cfg, "layout", "tp") == "fsdp"
+    if E % n == 0 and (x.shape[1] % n == 0 or fsdp_layout):
+        body = functools.partial(_moe_body_a2a, cfg=cfg, n=n)
+        if fsdp_layout and b_ax is not None and \
+                B % (dp_size * n) == 0 and B >= dp_size * n:
+            # batch already spans (data, model): tokens arrive fully split
+            x_spec = P(dp + ("model",), None, None)
+        else:
+            x_spec = P(b_ax, "model", None)
+        fn = shard_map(
+            body, mesh,
+            in_specs=(x_spec,                        # tokens 256-way split
+                      P(None, None),                 # router replicated
+                      P("model", None, None),        # experts EP-sharded
+                      P("model", None, None),
+                      P("model", None, None)),
+            out_specs=x_spec)
+    else:
+        body = functools.partial(_moe_body_tp, cfg=cfg)
+        fn = shard_map(
+            body, mesh,
+            in_specs=(P(b_ax, None, None),           # x replicated on model
+                      P(None, None),
+                      P(None, None, "model"),        # F sharded (TP)
+                      P(None, None, "model"),
+                      P(None, "model", None),
+                      ),
+            out_specs=P(b_ax, None, None))
+    out = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.n_shared_experts:
+        out = out + mlp_forward(x, p["shared"], cfg)
+    return out

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode over the cached model, with the
+jit'd ``serve_step`` also used by the decode-shape dry-runs.
+
+At 1000-node scale the same step functions run under pjit on the
+production mesh; the engine here adds the batching/termination logic a
+real server needs (static max_len, per-sequence EOS tracking).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, init_cache, prefill
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    """Pure decode step: (params, cache, tokens (B,1), pos (B,1)) ->
+    (logits (B,V), new_cache)."""
+
+    def serve_step(params, cache, batch, pos):
+        return decode_step(params, cfg, batch, cache, pos, mesh)
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, mesh=None):
+    def prefill_fn(params, cache, batch):
+        return prefill(params, cfg, batch, cache, mesh)
+
+    return prefill_fn
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jnp.ndarray         # (B, n_new)
+    logprobs: jnp.ndarray       # (B, n_new)
+
+
+def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, n_new: int,
+             *, temperature: float = 0.0, seed: int = 0, mesh=None,
+             eos_id: Optional[int] = None) -> GenerationResult:
+    """Greedy/temperature sampling for a batch of same-length prompts."""
+    B, S = prompts.shape
+    max_len = S + n_new
+    cache = init_cache(cfg, B, max_len)
+    pf = jax.jit(make_prefill(cfg, mesh))
+    st = jax.jit(make_serve_step(cfg, mesh))
+    logits, cache = pf(params, cache, {"tokens": prompts})
+
+    key = jax.random.PRNGKey(seed)
+    toks, lps = [], []
+    done = jnp.zeros((B,), bool)
+    for t in range(n_new):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        lps.append(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0])
+        if eos_id is not None:
+            done = done | (nxt == eos_id)
+        toks.append(nxt)
+        pos = jnp.full((B, 1), S + t, jnp.int32)
+        logits, cache = st(params, cache, {"tokens": nxt[:, None]}, pos)
+        if eos_id is not None and bool(done.all()):
+            break
+    return GenerationResult(tokens=jnp.stack(toks, axis=1),
+                            logprobs=jnp.stack(lps, axis=1))

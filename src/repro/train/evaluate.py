@@ -1,0 +1,37 @@
+"""Evaluation helpers: perplexity over held-out batches, and simple
+accuracy for the classification-style probes used in the forgetting
+experiments."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import forward, loss_fn
+
+
+def perplexity(params, cfg, batches, mesh=None) -> float:
+    jl = jax.jit(lambda p, b: loss_fn(p, cfg, b, mesh))
+    tot, n = 0.0, 0
+    for b in batches:
+        tot += float(jl(params, b))
+        n += 1
+    return math.exp(tot / max(n, 1))
+
+
+def token_accuracy(params, cfg, batches, mesh=None) -> float:
+    jf = jax.jit(lambda p, b: forward(p, cfg, b, mesh))
+    correct, total = 0, 0
+    for b in batches:
+        logits = jf(params, b)
+        pred = jnp.argmax(logits, axis=-1)
+        mask = b.get("mask")
+        ok = (pred == b["labels"])
+        if mask is not None:
+            correct += int((ok * mask).sum())
+            total += int(mask.sum())
+        else:
+            correct += int(ok.sum())
+            total += ok.size
+    return correct / max(total, 1)

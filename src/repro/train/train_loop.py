@@ -1,0 +1,110 @@
+"""Training loop: jit'd train_step with optional microbatch gradient
+accumulation and remat, a straggler watchdog, and checkpoint-manager hooks.
+
+``make_train_step`` builds the pure step function used both by the real
+trainer (examples/, launch/train.py) and by the multi-pod dry-run (lowered
+against ShapeDtypeStructs — never executed there).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig, TrainConfig
+from repro.models.model import loss_fn
+from repro.optim.adamw import AdamW
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW,
+                    train_cfg: Optional[TrainConfig] = None, mesh=None,
+                    loss=loss_fn):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, loss).
+
+    With train_cfg.microbatch > 0 the global batch is split into
+    micro-batches accumulated via lax.scan — activation memory scales with
+    the micro-batch while the gradient all-reduce happens once per step
+    (compute/comm overlap: XLA hoists the reduction out of the scan).
+    """
+    micro = train_cfg.microbatch if train_cfg else 0
+
+    def loss_of(params, batch):
+        return loss(params, cfg, batch, mesh)
+
+    def step(params, opt_state, batch):
+        if micro and batch["labels"].shape[0] > micro:
+            B = batch["labels"].shape[0]
+            n = B // micro
+            mb = jax.tree.map(
+                lambda a: a.reshape((n, micro) + a.shape[1:]), batch)
+
+            def accum(carry, b):
+                l, g = jax.value_and_grad(loss_of)(params, b)
+                return None, (l, g)
+
+            _, (ls, gs) = jax.lax.scan(accum, None, mb)
+            l = ls.mean()
+            grads = jax.tree.map(lambda g: g.mean(axis=0), gs)
+        else:
+            l, grads = jax.value_and_grad(loss_of)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, l
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# straggler watchdog (fault-tolerance substrate)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps slower than ``threshold`` x the rolling median. At fleet
+    scale the flag feeds the pod-replacement controller; here it logs."""
+    window: int = 32
+    threshold: float = 3.0
+
+    def __post_init__(self):
+        self._times = []
+        self.flagged = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        import statistics
+        slow = False
+        if len(self._times) >= 8:
+            med = statistics.median(self._times[-self.window:])
+            slow = seconds > self.threshold * med
+            if slow:
+                self.flagged.append((step, seconds, med))
+        self._times.append(seconds)
+        return slow
+
+
+def train(params, cfg, opt_cfg: OptimizerConfig, batches,
+          train_cfg: Optional[TrainConfig] = None, mesh=None,
+          ckpt_manager=None, ckpt_every: int = 0, start_step: int = 0,
+          log_every: int = 0, watchdog: Optional[StragglerWatchdog] = None):
+    """Simple synchronous trainer used by examples and tests."""
+    opt = AdamW(opt_cfg)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, train_cfg, mesh))
+    losses = []
+    for i, batch in enumerate(batches):
+        step = start_step + i
+        t0 = time.perf_counter()
+        params, opt_state, l = step_fn(params, opt_state, batch)
+        l = float(l)
+        dt = time.perf_counter() - t0
+        if watchdog is not None:
+            watchdog.observe(step, dt)
+        losses.append(l)
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d} loss {l:.4f} ({dt*1e3:.0f} ms)")
+        if ckpt_manager is not None and ckpt_every and \
+                (step + 1) % ckpt_every == 0:
+            ckpt_manager.save(step + 1, {"params": params,
+                                         "opt_state": opt_state})
+    return params, opt_state, losses

@@ -1,0 +1,56 @@
+"""Train-once model zoo for the CPU-scale quality experiments.
+
+The paper's quality results (Fig. 4-7, Tables 4-6) need a *trained* model —
+compression error on random weights is meaningless (they're full-rank).
+``get_trained_repro()`` trains the llama-family repro model on the
+synthetic corpus and caches it via the fault-tolerant CheckpointManager, so
+examples/benchmarks share one artifact.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.configs import get_repro
+from repro.configs.base import OptimizerConfig, TrainConfig
+from repro.data.tokens import DataConfig, SyntheticLM
+from repro.dist.checkpoint import CheckpointManager
+from repro.models import init_params
+from repro.train.train_loop import train
+
+ZOO_DIR = os.environ.get("REPRO_ZOO", "results/zoo")
+SEQ_LEN = 256
+BATCH = 16
+
+
+def data_config(cfg, seed: int = 0) -> DataConfig:
+    return DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ_LEN,
+                      global_batch=BATCH, seed=seed)
+
+
+def eval_batches(cfg, n: int = 4, seed: int = 10_000):
+    ds = SyntheticLM(data_config(cfg, seed=0))
+    return [ds.batch_at(seed + i) for i in range(n)]
+
+
+def get_trained_repro(steps: int = 300, quick: bool = False):
+    """Returns (params, cfg). Trains + caches on first call."""
+    cfg = get_repro()
+    if quick:
+        steps = min(steps, 150)
+    tag = f"{cfg.name}-s{steps}"
+    mgr = CheckpointManager(os.path.join(ZOO_DIR, tag), keep_n=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    got = mgr.latest_valid_step()
+    if got is not None:
+        _, state = mgr.restore({"params": params})
+        return state["params"], cfg
+    ds = SyntheticLM(data_config(cfg))
+    batches = (ds.batch_at(i) for i in range(steps))
+    params, _, losses = train(
+        params, cfg,
+        OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=steps),
+        list(batches), log_every=50)
+    mgr.save(steps, {"params": params})
+    return params, cfg

@@ -1,0 +1,133 @@
+"""CURing compression pipeline: structure preservation, Eq. 2 savings,
+selection-method quality ordering (paper App. D.2), fold equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.core.compress import compress_weight, fold_cur, select_indices
+from repro.models import forward, init_params
+from repro.models.layers import apply_w, cur_materialize, w_shape
+
+from conftest import make_batch
+
+
+@pytest.fixture(scope="module")
+def compressed(tiny_cfg, tiny_params):
+    calib = calibrate(tiny_params, tiny_cfg, [make_batch(tiny_cfg, 2, 32)])
+    ccfg = CURConfig(r_max=16, n_compress_layers=2)
+    return compress_model(tiny_params, tiny_cfg, ccfg, calib)
+
+
+def test_io_dims_preserved(tiny_cfg, tiny_params, compressed):
+    """The paper's structural claim: compressed layers keep (m, n)."""
+    new_params, new_cfg, info = compressed
+    for w in info.weights:
+        block = new_params["groups"][w.layer][0]
+        leaf = jax.tree.map(lambda a: a[0], block[w.name])
+        assert w_shape(leaf) == w.shape
+
+
+def test_params_actually_saved(compressed):
+    _, _, info = compressed
+    assert info.params_saved > 0
+    for w in info.weights:
+        assert w.params_after < w.params_before
+        assert w.rank & (w.rank - 1) == 0
+
+
+def test_compressed_forward_close_to_original(tiny_cfg, tiny_params,
+                                              compressed):
+    new_params, new_cfg, _ = compressed
+    b = make_batch(tiny_cfg, 2, 32, seed=5)
+    l0 = forward(tiny_params, tiny_cfg, b)
+    l1 = forward(new_params, new_cfg, b)
+    corr = float(jnp.corrcoef(l0.ravel(), l1.ravel())[0, 1])
+    assert corr > 0.8, f"logit correlation too low: {corr}"
+
+
+def test_cur_rows_cols_are_original_values(tiny_cfg, tiny_params,
+                                           compressed):
+    """C/R are actual columns/rows of W — interpretability property (§6.1).
+    Also preserves characteristics like sign patterns."""
+    new_params, new_cfg, info = compressed
+    w = info.weights[0]
+    W = _orig_weight(tiny_params, tiny_cfg, w.layer, w.name)
+    leaf = jax.tree.map(lambda a: a[0],
+                        new_params["groups"][w.layer][0][w.name])
+    np.testing.assert_allclose(np.asarray(leaf["C"]), W[:, w.cols],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(leaf["R"]), W[w.rows, :],
+                               rtol=1e-5)
+
+
+def _orig_weight(params, cfg, layer, name):
+    from repro.core.calibrate import iter_layer_params
+    for li, spec, lp in iter_layer_params(params, cfg):
+        if li == layer:
+            return np.asarray(lp[name])
+    raise KeyError
+
+
+def test_fold_u_equivalence():
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (48, 64))
+    leaf, _ = compress_weight(W, "wq", 0, CURConfig(r_max=8),
+                              np.ones(48), key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (5, 48))
+    y1 = apply_w(x, leaf)
+    y2 = apply_w(x, fold_cur(leaf))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_selection_quality_ordering():
+    """Paper Table 5: WANDA+DEIM approximates W better than random.
+    Uses a structured (approximately low-rank) weight like trained nets."""
+    key = jax.random.PRNGKey(42)
+    k1, k2, k3 = jax.random.split(key, 3)
+    W = (jax.random.normal(k1, (96, 12)) @ jax.random.normal(k2, (12, 80))
+         + 0.1 * jax.random.normal(k3, (96, 80)))
+    act = np.abs(np.random.RandomState(0).randn(96)) + 0.1
+    errs = {}
+    for method in ("wanda_deim", "deim", "random"):
+        leaf, info = compress_weight(
+            W, "w", 0, CURConfig(r_max=8, selection=method), act, k3)
+        errs[method] = info.fro_err
+    assert errs["wanda_deim"] < errs["random"]
+    assert errs["deim"] < errs["random"]
+
+
+def test_selection_methods_all_run():
+    key = jax.random.PRNGKey(1)
+    W = jax.random.normal(key, (40, 56))
+    act = np.ones(40)
+    for method in ("wanda_deim", "wanda", "deim", "weight", "random"):
+        p, q, _ = select_indices(W, 8, method, act, key)
+        assert len(set(np.asarray(p).tolist())) == 8
+        assert len(set(np.asarray(q).tolist())) == 8
+
+
+def test_randomized_svd_compression_close_to_exact():
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    W = (jax.random.normal(k1, (128, 16)) @ jax.random.normal(k2, (16, 96))
+         + 0.05 * jax.random.normal(k3, (128, 96)))
+    act = np.ones(128)
+    _, exact = compress_weight(W, "w", 0,
+                               CURConfig(r_max=16, svd="exact"), act, k1)
+    _, rand = compress_weight(W, "w", 0,
+                              CURConfig(r_max=16, svd="randomized"), act, k1)
+    assert rand.fro_err <= exact.fro_err * 2.0
+
+
+def test_angular_distance_layer_selection(tiny_cfg, tiny_params, compressed):
+    _, _, info = compressed
+    L = tiny_cfg.n_layers
+    assert 0 not in info.layers and (L - 1) not in info.layers
+    cands = [info.distances[i] for i in range(1, L - 1)]
+    chosen = [info.distances[i] for i in info.layers]
+    assert max(chosen) <= max(cands)
+    assert sorted(chosen) == sorted(sorted(cands)[:len(chosen)])

@@ -1,0 +1,118 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cur_matmul.ops import cur_matmul_op
+from repro.kernels.cur_matmul.ref import cur_chain_ref, cur_matmul_ref
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _assert_close(y, yr, dtype):
+    """Scale-relative comparison (bf16 inputs make large-magnitude sums;
+    elementwise atol is meaningless there)."""
+    y = np.asarray(y, np.float32)
+    yr = np.asarray(yr, np.float32)
+    scale = np.abs(yr).max() + 1e-9
+    rel = np.abs(y - yr).max() / scale
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert rel < tol, f"max scaled error {rel} > {tol}"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,m,rk,n", [
+    (256, 128, 32, 256),
+    (128, 256, 64, 512),
+    (512, 64, 16, 128),
+    (96, 100, 24, 200),       # non-128-aligned fallback path
+])
+def test_cur_matmul_sweep(M, m, rk, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (M, m), jnp.float32).astype(dtype)
+    cu = jax.random.normal(ks[1], (m, rk), jnp.float32).astype(dtype)
+    r = jax.random.normal(ks[2], (rk, n), jnp.float32).astype(dtype)
+    y = cur_matmul_op(x, cu, r, bm=128, bn=128)
+    yr = cur_matmul_ref(x, cu, r)
+    _assert_close(y, yr, dtype)
+
+
+def test_cur_matmul_batched_leading_dims():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (2, 8, 16, 128))
+    cu = jax.random.normal(ks[1], (128, 32))
+    r = jax.random.normal(ks[2], (32, 256))
+    y = cur_matmul_op(x, cu, r)
+    assert y.shape == (2, 8, 16, 256)
+    yr = cur_matmul_ref(x.reshape(-1, 128), cu, r).reshape(2, 8, 16, 256)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cur_matmul_equals_chain():
+    """Folded kernel output == unfolded healing-form chain."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (64, 96))
+    c = jax.random.normal(ks[1], (96, 16))
+    u = jax.random.normal(ks[2], (16, 16))
+    r = jax.random.normal(ks[3], (16, 80))
+    y1 = cur_matmul_op(x, c @ u, r)
+    y2 = cur_chain_ref(x, c, u, r)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,d,win", [
+    (1, 4, 2, 128, 32, 0),
+    (2, 4, 4, 64, 16, 0),      # MHA
+    (1, 8, 1, 128, 32, 0),     # MQA
+    (1, 4, 2, 128, 32, 48),    # sliding window
+    (1, 2, 2, 64, 64, 16),
+])
+def test_flash_attention_sweep(B, H, K, S, d, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, S, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, S, d), jnp.float32).astype(dtype)
+    y = flash_attention_op(q, k, v, window=win, bq=32, bk=32)
+    yr = flash_attention_ref(q, k, v, window=win)
+    _assert_close(y, yr, dtype)
+
+
+def test_flash_attention_block_shape_independence():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    y1 = flash_attention_op(q, k, v, bq=32, bk=32)
+    y2 = flash_attention_op(q, k, v, bq=64, bk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_matches_model_attention_path():
+    """Kernel agrees with the model's chunked-jnp attention (the dry-run
+    lowering basis) — same math, two implementations."""
+    import repro.models.attention as at
+    from repro.configs import get_smoke
+    from repro.models import init_params
+
+    cfg = get_smoke("olmo-1b").replace(attn_chunk=16)
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    p = jax.tree.map(lambda a: a[0], params["groups"][0][0])
+    B, S = 1, 64
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    q, k, v = at.qkv_project(x, p, cfg, pos)
+    qg = q.reshape(B, S, cfg.n_kv_heads, -1, cfg.resolved_head_dim)
+    o_model = at._flash_attn(qg, k, v, pos, pos,
+                             cfg.resolved_head_dim ** -0.5, 16)
+    o_kernel = flash_attention_op(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), bq=16, bk=16)
+    o_kernel = o_kernel.transpose(0, 2, 1, 3).reshape(o_model.shape)
+    np.testing.assert_allclose(np.asarray(o_model), np.asarray(o_kernel),
+                               rtol=1e-3, atol=1e-3)

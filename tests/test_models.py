@@ -1,0 +1,107 @@
+"""Per-arch smoke tests (assignment requirement): every one of the 10
+assigned architectures instantiates a REDUCED config, runs one forward and
+one train step on CPU, asserts output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import OptimizerConfig, SHAPES, shape_applicable
+from repro.models import forward, init_params, loss_fn
+from repro.optim.adamw import AdamW
+from repro.train.train_loop import make_train_step
+
+from conftest import make_batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=4))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = make_batch(cfg, 2, 16)
+    p1, s1, l1 = step(params, opt_state, batch)
+    p2, s2, l2 = step(p1, s1, batch)
+    assert jnp.isfinite(l1) and jnp.isfinite(l2)
+    assert float(l2) < float(l1)          # same batch: loss must drop
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(p1)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_block_structure(arch):
+    cfg = get_config(arch)
+    assert len(cfg.blocks) == cfg.n_layers
+    assert cfg.param_count() > 0
+
+
+def test_shape_applicability_matrix():
+    cells = [(a, s) for a in ARCHS for s in SHAPES
+             if shape_applicable(a, SHAPES[s])]
+    # 10 archs x 3 universal shapes + 4 sub-quadratic x long_500k
+    assert len(cells) == 34
+    skips = [(a, "long_500k") for a in ARCHS
+             if not shape_applicable(a, SHAPES["long_500k"])]
+    assert len(skips) == 6
+
+
+def test_scan_vs_unrolled_equivalence():
+    """Scanned and unrolled group execution produce identical outputs."""
+    cfg = get_smoke("olmo-1b").replace(scan_layers=True)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    batch = make_batch(cfg, 2, 16)
+    l_scan = forward(params, cfg, batch)
+    l_unroll = forward(params, cfg.replace(scan_layers=False), batch)
+    assert jnp.allclose(l_scan, l_unroll, atol=1e-5)
+
+
+def test_static_loops_equivalence():
+    """Static (python-unrolled, causal-skipping) attention matches the
+    scanned flash path — validates the dry-run cost-compile basis."""
+    cfg = get_smoke("olmo-1b").replace(attn_chunk=16)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    batch = make_batch(cfg, 1, 64)
+    base = forward(params, cfg, batch)
+    # force long-seq paths by dropping the dense threshold
+    import repro.models.attention as at
+    old = at.DENSE_MAX
+    at.DENSE_MAX = 8
+    try:
+        flash = forward(params, cfg, batch)
+        static = forward(params, cfg.replace(static_loops=True), batch)
+    finally:
+        at.DENSE_MAX = old
+    assert jnp.allclose(base, flash, atol=2e-3), "flash != dense"
+    assert jnp.allclose(base, static, atol=2e-3), "static != dense"
+
+
+def test_banded_local_attention_matches_dense():
+    cfg = get_smoke("gemma3-1b").replace(attn_chunk=16, window=24)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    batch = make_batch(cfg, 1, 64)
+    base = forward(params, cfg, batch)
+    import repro.models.attention as at
+    old = at.DENSE_MAX
+    at.DENSE_MAX = 8
+    try:
+        banded = forward(params, cfg, batch)
+        static = forward(params, cfg.replace(static_loops=True), batch)
+    finally:
+        at.DENSE_MAX = old
+    assert jnp.allclose(base, banded, atol=2e-3)
+    assert jnp.allclose(base, static, atol=2e-3)

@@ -1,0 +1,100 @@
+"""Optimizer: AdamW vs a numpy reference, int8 moment quantization, and
+schedule behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.adamw import AdamW, _dq8, _q8, make_schedule
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def _np_adamw(p, g, m, v, step, cfg):
+    gnorm = np.sqrt((g ** 2).sum())
+    clip = min(1.0, cfg.grad_clip / max(gnorm, 1e-9))
+    g = g * clip
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m / (1 - cfg.b1 ** (step + 1))
+    vh = v / (1 - cfg.b2 ** (step + 1))
+    delta = mh / (np.sqrt(vh) + cfg.eps)
+    if p.ndim >= 2:
+        delta = delta + cfg.weight_decay * p
+    lr = cfg.lr * min(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return p - lr * delta, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                          schedule="constant")
+    opt = AdamW(cfg)
+    p = {"w": jnp.asarray(np.random.RandomState(0).randn(4, 5), jnp.float32)}
+    state = opt.init(p)
+    pn = np.asarray(p["w"])
+    mn = np.zeros_like(pn)
+    vn = np.zeros_like(pn)
+    for step in range(5):
+        g = {"w": jnp.asarray(
+            np.random.RandomState(step + 1).randn(4, 5), jnp.float32)}
+        p, state = opt.update(p, g, state)
+        pn, mn, vn = _np_adamw(pn, np.asarray(g["w"]), mn, vn, step, cfg)
+        np.testing.assert_allclose(np.asarray(p["w"]), pn,
+                                   rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 100), rows=st.integers(1, 8),
+       cols=st.integers(2, 64))
+def test_q8_roundtrip_bounded(seed, rows, cols):
+    x = jnp.asarray(np.random.RandomState(seed).randn(rows, cols) * 10,
+                    jnp.float32)
+    q, s = _q8(x)
+    y = _dq8(q, s, x.shape)
+    # error bounded by scale/254 per element (midpoint of a bucket)
+    bound = np.asarray(s)[..., None] / 127.0 * 0.5 + 1e-6
+    assert np.all(np.abs(np.asarray(x - y)) <= bound)
+    assert q.dtype == jnp.int8
+    assert s.shape == x.shape[:-1]
+
+
+def test_quantized_adam_tracks_fp32():
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                          schedule="constant")
+    opt32 = AdamW(cfg)
+    opt8 = AdamW(OptimizerConfig(**{**cfg.__dict__, "quantized_state": True}))
+    p32 = {"w": jnp.ones((8, 64)) * 0.5}
+    p8 = {"w": jnp.ones((8, 64)) * 0.5}
+    s32, s8 = opt32.init(p32), opt8.init(p8)
+    for step in range(10):
+        g = {"w": jnp.asarray(
+            np.random.RandomState(step).randn(8, 64), jnp.float32) * 0.1}
+        p32, s32 = opt32.update(p32, g, s32)
+        p8, s8 = opt8.update(p8, g, s8)
+    rel = float(jnp.abs(p32["w"] - p8["w"]).max()
+                / jnp.abs(p32["w"]).max())
+    assert rel < 0.05, f"int8 moments diverged: {rel}"
+
+
+def test_cosine_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lr = make_schedule(cfg)
+    assert float(lr(0)) == pytest.approx(0.1, rel=1e-3)
+    assert float(lr(9)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(99)) < 0.01
+    mid = float(lr(55))
+    assert 0.3 < mid < 0.7
+
+
+def test_decoupled_weight_decay_skips_vectors():
+    cfg = OptimizerConfig(lr=1e-2, weight_decay=1.0, warmup_steps=1,
+                          total_steps=10, schedule="constant")
+    opt = AdamW(cfg)
+    p = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    state = opt.init(p)
+    g = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    p2, _ = opt.update(p, g, state)
+    assert float(p2["w"].max()) < 1.0       # decayed
+    np.testing.assert_allclose(np.asarray(p2["b"]), 1.0)  # not decayed

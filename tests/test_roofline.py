@@ -1,0 +1,63 @@
+"""Roofline HLO parsers: collective payloads, essential bytes, model
+FLOPs."""
+import textwrap
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.roofline.analysis import (
+    collective_bytes, essential_bytes, model_flops)
+
+HLO = textwrap.dedent("""\
+    ENTRY %main (p0: bf16[16,4096,2048]) -> bf16[16,4096,2048] {
+      %p0 = bf16[16,4096,2048]{2,1,0} parameter(0)
+      %ar = f32[16,4096,2048]{2,1,0} all-reduce(%cvt), channel_id=5
+      %ag = bf16[128,2048]{1,0} all-gather(%w), channel_id=6
+      %rs = f32[8,2048]{1,0} reduce-scatter(%g), channel_id=7
+      %a2a = bf16[16,64,512]{2,1,0} all-to-all(%send), channel_id=8
+      %cp = bf16[4,4]{1,0} collective-permute(%x), channel_id=9
+      %d = f32[128,128]{1,0} dot(bf16[128,64]{1,0} %a, bf16[64,128]{1,0} %b)
+    }
+""")
+
+
+def test_collective_bytes_parses_all_five_ops():
+    out = collective_bytes(HLO)
+    assert out["count"] == 5
+    assert out["all-reduce"] == 16 * 4096 * 2048 * 4
+    assert out["all-gather"] == 128 * 2048 * 2
+    assert out["reduce-scatter"] == 8 * 2048 * 4
+    assert out["all-to-all"] == 16 * 64 * 512 * 2
+    assert out["collective-permute"] == 16 * 2
+    assert out["total"] == sum(out[k] for k in (
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_essential_bytes_counts_dots_and_skips_fused_bodies():
+    hlo = textwrap.dedent("""\
+        %fused_computation.1 (param_0: f32[64,64]) -> f32[64,64] {
+          %big = f32[9999,9999]{1,0} add(%a, %b)
+        }
+        ENTRY %main {
+          %d = f32[128,128]{1,0} dot(f32[128,64]{1,0} %a, f32[64,128]{1,0} %b)
+        }
+    """)
+    b = essential_bytes(hlo)
+    dot_bytes = (128 * 128 + 128 * 64 + 64 * 128) * 4
+    assert b == dot_bytes, b
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("olmo-1b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == 6.0 * n * 256 * 4096
+    assert de == 2.0 * n * 128
+
+
+def test_moe_model_flops_use_active_params():
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < 0.4 * cfg.param_count()
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    assert tr == 6.0 * cfg.active_param_count() * 256 * 4096

@@ -1,0 +1,114 @@
+"""Sharding rules: every PartitionSpec produced for every arch must divide
+the corresponding dim — validated on an abstract 16x16 mesh without
+devices. (The numerical shard_map tests live in test_distributed.py.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import CURConfig, OptimizerConfig, SHAPES, \
+    shape_applicable
+from repro.dist import sharding as shd
+from repro.launch import specs as sp
+from repro.optim.adamw import AdamW
+
+
+def _mesh(multi_pod=False):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _check_divisible(tree, specs, mesh, tag):
+    leaves, tdef = jax.tree_util.tree_flatten(tree)
+    slv = tdef.flatten_up_to(specs)
+    for leaf, spec in zip(leaves, slv):
+        if spec is None:
+            continue
+        assert len(spec) <= len(leaf.shape), (tag, leaf.shape, spec)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (tag, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    cfg = get_config(arch)
+    mesh = _mesh(multi_pod)
+    params = sp.param_specs(cfg)
+    specs = shd.param_pspecs(params, cfg, mesh)
+    _check_divisible(params, specs, mesh, arch)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "kimi-k2-1t-a32b",
+                                  "mamba2-1.3b"])
+def test_cur_param_specs_divisible(arch):
+    cfg = get_config(arch)
+    mesh = _mesh()
+    params = sp.structural_cur(sp.param_specs(cfg), cfg, CURConfig())
+    specs = shd.param_pspecs(params, cfg, mesh)
+    _check_divisible(params, specs, mesh, arch)
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "olmo-1b"])
+def test_opt_state_specs_divisible(arch):
+    cfg = get_config(arch)
+    mesh = _mesh()
+    params = sp.param_specs(cfg)
+    opt = AdamW(OptimizerConfig(quantized_state=(arch.startswith("kimi"))))
+    opt_state = jax.eval_shape(opt.init, params)
+    specs = shd.opt_state_pspecs(opt_state, cfg, mesh)
+    _check_divisible(opt_state, specs, mesh, arch)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_cache_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(arch, shape) or shape.kind == "train":
+        pytest.skip("n/a")
+    mesh = _mesh()
+    cache = sp.cache_specs(cfg, shape)
+    specs = shd.cache_pspecs(cache, cfg, shape, mesh)
+    _check_divisible(cache, specs, mesh, f"{arch}/{shape_name}")
+
+
+def test_tp_sharding_assignments():
+    """Spot-check the layout contract (DESIGN.md §4)."""
+    cfg = get_config("deepseek-67b")       # fsdp=True
+    mesh = _mesh()
+    params = sp.param_specs(cfg)
+    specs = shd.param_pspecs(params, cfg, mesh)
+    blk = specs["groups"][0][0]
+    assert blk["wq"] == P(None, "data", "model")
+    assert blk["wo"] == P(None, "model", "data")
+    assert blk["w_down"] == P(None, "model", "data")
+    assert specs["embed"] == P("model", None)
+
+    kimi = get_config("kimi-k2-1t-a32b")
+    kp = sp.param_specs(kimi)
+    ks = shd.param_pspecs(kp, kimi, mesh)
+    moe_blk = ks["groups"][1][0]
+    assert moe_blk["w_gate"] == P(None, "model", "data", None)  # EP
+    mix = get_config("mixtral-8x22b")
+    mp = sp.param_specs(mix)
+    ms = shd.param_pspecs(mp, mix, mesh)
+    assert ms["groups"][0][0]["w_gate"] == P(None, None, "data", "model")
+
+
+def test_structural_cur_reduces_params():
+    cfg = get_config("deepseek-67b")
+    dense = sp.param_specs(cfg)
+    cur = sp.structural_cur(dense, cfg, CURConfig(r_max=256))
+    assert sp.count_struct_params(cur) < sp.count_struct_params(dense)
+    blk = cur["groups"][0][0]
+    assert set(blk["wq"].keys()) == {"C", "U0", "dU", "R"}
+    # Eq. 2 rank: wq is (8192, 8192) -> r_max cap
+    assert blk["wq"]["U0"].shape == (95, 256, 256)

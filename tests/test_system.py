@@ -1,0 +1,74 @@
+"""End-to-end behaviour of the paper's system: train -> calibrate ->
+compress -> heal, asserting the paper's qualitative claims at CPU scale."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_repro
+from repro.configs.base import CURConfig, OptimizerConfig
+from repro.core import calibrate, compress_model
+from repro.core.heal import (
+    combine_params, make_heal_step, partition_params, trainable_mask)
+from repro.data.tokens import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.optim.adamw import AdamW
+from repro.train.evaluate import perplexity
+from repro.train.train_loop import train
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_repro().replace(
+        d_model=128, n_layers=6, n_heads=8, n_kv_heads=4, head_dim=16,
+        d_ff=352, vocab_size=1024,
+        groups=((get_repro().groups[0][0], 6),))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=8)
+    ds = SyntheticLM(dc)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params, _, losses = train(
+        params, cfg,
+        OptimizerConfig(lr=2e-3, warmup_steps=10, total_steps=80),
+        [ds.batch_at(i) for i in range(80)])
+    assert losses[-1] < losses[0] - 0.5, "model failed to train"
+    evalb = [ds.batch_at(10_000 + i) for i in range(2)]
+    return params, cfg, ds, evalb
+
+
+def test_end_to_end_compress_then_heal(trained):
+    params, cfg, ds, evalb = trained
+    ppl0 = perplexity(params, cfg, evalb)
+    # 80 CPU steps on the Zipf-Markov corpus: well below the uniform
+    # baseline (1024) but far from converged
+    assert ppl0 < cfg.vocab_size * 0.75, "trained ppl should beat uniform"
+
+    calib = calibrate(params, cfg, [ds.batch_at(500 + i) for i in range(2)])
+    sp, scfg, info = compress_model(
+        params, cfg, CURConfig(r_max=32, n_compress_layers=2), calib)
+    ppl1 = perplexity(sp, scfg, evalb)
+    assert info.params_saved > 0
+    # paper claim: compression without retraining degrades but stays sane
+    assert ppl1 < ppl0 * 5
+
+    mask = trainable_mask(sp, "dU")
+    tr, fr = partition_params(sp, mask)
+    opt = AdamW(OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=60))
+    opt_state = opt.init(tr)
+    step = jax.jit(make_heal_step(scfg, cfg, params, opt))
+    for s in range(40):
+        tr, opt_state, _ = step(tr, fr, opt_state, ds.batch_at(600 + s))
+    healed = combine_params(tr, fr)
+    ppl2 = perplexity(healed, scfg, evalb)
+    # paper claim (Fig. 5): healing restores performance quickly
+    assert ppl2 < ppl1, (ppl0, ppl1, ppl2)
+    assert ppl2 < ppl0 * 1.5, (ppl0, ppl1, ppl2)
+
+
+def test_angular_distance_profile(trained):
+    """Paper §4.1: angular distances identify redundant layers; the first
+    block (operating on raw embeddings) moves its input the most."""
+    params, cfg, ds, _ = trained
+    calib = calibrate(params, cfg, [ds.batch_at(900)])
+    from repro.core.angular import layer_distances
+    d = layer_distances(calib.hidden)
+    assert d[0] == max(d), f"first block should move its input most: {d}"
+    assert all(0.0 <= x <= 1.0 for x in d)
