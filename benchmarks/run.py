@@ -20,6 +20,7 @@ MODULES = [
     "bench_forgetting",           # Fig 6 / Fig 7
     "bench_activation_alignment", # Table 6
     "bench_kernels",              # kernel-level
+    "bench_collectives",          # compressed vs dense psum payloads
     "bench_roofline",             # dry-run roofline table
 ]
 

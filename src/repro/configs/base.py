@@ -250,6 +250,8 @@ class TrainConfig:
     distill_alpha: float = 0.1      # paper App. B: CE weight (KD weight 0.9)
     distill_temp: float = 10.0
     seed: int = 0
+    # error-feedback compressed gradient collectives (repro.dist.compression)
+    grad_compress: str = "none"     # "none" | "ef_int8"
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,13 @@
+"""Distributed substrate: sharding rules, fault-tolerant checkpointing,
+elastic recovery planning, and compressed collectives.
+
+Modules
+-------
+sharding     PartitionSpec derivation for params / optimizer state / caches /
+             batches on (data, model) and (pod, data, model) meshes, with
+             dispatch on CUR-factorized dict leaves ({C, U0, dU, R} and the
+             folded {CU, R} serving form).
+checkpoint   Atomic, checksummed, keep-N, async CheckpointManager.
+elastic      Post-failure data-parallel re-planning (pow-2 + spares).
+compression  Error-feedback int8-compressed gradient collectives.
+"""

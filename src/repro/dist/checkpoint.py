@@ -1,0 +1,233 @@
+"""Fault-tolerant checkpointing.
+
+Layout: one directory per step under the manager root,
+
+    step_00000123/
+        leaf_00000.npy ... leaf_NNNNN.npy     flattened pytree leaves
+        manifest.json                         step, leaf files, crc32s
+
+Guarantees:
+  - **Atomicity**: leaves + manifest are written into ``step_*.tmp`` and
+    ``os.replace``d into place; a crash mid-save leaves only a ``.tmp``
+    directory, which is never listed as a checkpoint (and is swept by the
+    next save).
+  - **Corruption fallback**: every leaf file carries a crc32 in the
+    manifest; ``latest_valid_step`` verifies and falls back to the newest
+    step whose files all check out.
+  - **Keep-N GC**: after a successful save, all but the newest ``keep_n``
+    steps are deleted.
+  - **Async save**: ``save(..., blocking=False)`` snapshots leaves to host
+    memory synchronously (so training can overwrite the buffers) and
+    writes on a background thread; ``wait()`` joins it.
+  - **Sharded restore**: ``restore(template, shardings=...)`` device_puts
+    each leaf to its NamedSharding, so a 256-way sharded state loads
+    without materializing the full tree on one device.
+
+bfloat16 leaves are stored as uint16 views (npy has no portable bf16
+descr); the manifest records the logical dtype for restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_BF16_TAG = "bfloat16"
+
+
+def _step_dirname(step: int) -> str:
+    return f"step_{step:08d}"
+
+
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _to_host(leaf) -> Tuple[np.ndarray, str]:
+    """Device array -> (savable ndarray, logical dtype tag)."""
+    arr = np.asarray(leaf)
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16), _BF16_TAG
+    return arr, str(arr.dtype)
+
+
+def _from_host(arr: np.ndarray, dtype_tag: str) -> np.ndarray:
+    if dtype_tag == _BF16_TAG:
+        return arr.view(jnp.bfloat16)
+    return arr
+
+
+class CheckpointManager:
+    """Manages the checkpoint directory for one training run."""
+
+    def __init__(self, directory: str, keep_n: Optional[int] = None):
+        self.directory = directory
+        self.keep_n = keep_n
+        self._thread: Optional[threading.Thread] = None
+        self._save_error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- enumeration --------------------------------------------------------
+
+    def all_steps(self):
+        """Steps with a completed (renamed + manifest) checkpoint dir."""
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if not m:
+                continue
+            if os.path.isfile(os.path.join(self.directory, name,
+                                           "manifest.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def _verify(self, step: int) -> bool:
+        d = os.path.join(self.directory, _step_dirname(step))
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            for entry in manifest["leaves"]:
+                path = os.path.join(d, entry["file"])
+                if _crc32_file(path) != entry["crc32"]:
+                    return False
+        except (OSError, ValueError, KeyError):
+            return False
+        return True
+
+    def latest_valid_step(self) -> Optional[int]:
+        """Newest step whose leaf checksums all verify (corruption skips
+        back to the previous intact checkpoint)."""
+        for step in reversed(self.all_steps()):
+            if self._verify(step):
+                return step
+        return None
+
+    def leaf_count(self, step: int) -> int:
+        """Number of pytree leaves in checkpoint ``step`` (manifest read
+        only — lets callers pick a matching restore template cheaply)."""
+        d = os.path.join(self.directory, _step_dirname(step))
+        with open(os.path.join(d, "manifest.json")) as f:
+            return int(json.load(f)["n_leaves"])
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        """Write ``tree`` as checkpoint ``step``. With ``blocking=False``
+        the device->host snapshot happens now and the file I/O on a
+        background thread."""
+        self.wait()                      # one in-flight async save at a time
+        leaves = jax.tree.leaves(tree)
+        host = [_to_host(l) for l in leaves]
+        if blocking:
+            self._write(step, host)
+            return
+        self._thread = threading.Thread(
+            target=self._write_guarded, args=(step, host), daemon=True)
+        self._thread.start()
+
+    def _write_guarded(self, step, host):
+        try:
+            self._write(step, host)
+        except BaseException as e:  # surfaced by the next wait()
+            self._save_error = e
+
+    def _write(self, step: int, host) -> None:
+        final = os.path.join(self.directory, _step_dirname(step))
+        tmp = final + ".tmp"
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        entries = []
+        for i, (arr, dtype_tag) in enumerate(host):
+            fname = f"leaf_{i:05d}.npy"
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, arr)
+            entries.append({"file": fname, "dtype": dtype_tag,
+                            "crc32": _crc32_file(fpath)})
+        manifest = {"step": step, "n_leaves": len(entries),
+                    "leaves": entries}
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        # dead .tmp dirs from crashed saves
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp") and _STEP_RE.match(name[:-4]):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
+        if not self.keep_n:
+            return
+        steps = self.all_steps()
+        for step in steps[:-self.keep_n]:
+            shutil.rmtree(
+                os.path.join(self.directory, _step_dirname(step)),
+                ignore_errors=True)
+
+    def wait(self) -> None:
+        """Join any in-flight async save; re-raise its error if it failed."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._save_error is not None:
+            err, self._save_error = self._save_error, None
+            raise err
+
+    # -- restore ------------------------------------------------------------
+
+    def restore(self, template: Any, shardings: Any = None,
+                step: Optional[int] = None) -> Tuple[int, Any]:
+        """Load the newest valid checkpoint (or ``step``) into the
+        structure of ``template``. ``shardings`` is an optional pytree of
+        Shardings (or devices) matching ``template``; leaves are placed
+        there as they load."""
+        if step is None:
+            step = self.latest_valid_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no valid checkpoint under {self.directory}")
+        d = os.path.join(self.directory, _step_dirname(step))
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, tdef = jax.tree.flatten(template)
+        if len(flat) != manifest["n_leaves"]:
+            raise ValueError(
+                f"checkpoint {step} has {manifest['n_leaves']} leaves, "
+                f"template has {len(flat)}")
+        sh_flat = [None] * len(flat)
+        if shardings is not None:
+            sh_flat = tdef.flatten_up_to(shardings)
+        out = []
+        for i, (entry, sh, tmpl) in enumerate(
+                zip(manifest["leaves"], sh_flat, flat)):
+            arr = _from_host(np.load(os.path.join(d, entry["file"])),
+                             entry["dtype"])
+            tshape = getattr(tmpl, "shape", None)
+            if tshape is not None and tuple(arr.shape) != tuple(tshape):
+                raise ValueError(
+                    f"checkpoint {step} leaf {i} ({entry['file']}) has "
+                    f"shape {tuple(arr.shape)}, template expects "
+                    f"{tuple(tshape)} — wrong arch/config for this "
+                    f"checkpoint dir?")
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jnp.asarray(arr))
+        return step, tdef.unflatten(out)

@@ -1,0 +1,80 @@
+"""Compressed gradient collectives with error feedback.
+
+Gradient traffic dominates the interconnect at large data-parallel
+degree. Both primitives here use per-row absmax int8 quantization — the
+same code layout as the optimizer's 8-bit moments (optim/adamw.py), so
+the wire format is 1 byte/element + one f32 scale per row, ~3.9x fewer
+bytes than a dense f32 collective.
+
+``compressed_psum`` replaces ``lax.psum`` inside ``shard_map``: each
+device quantizes its local shard, the int8 codes + scales are
+all-gathered (the compressed payload is what crosses the network), and
+the reduction happens locally in f32.
+
+``ef_compress_grads`` implements error feedback (EF-SGD): the previous
+round's quantization residual is added to the gradient before
+compressing, so the bias of the compressor cancels over steps —
+accumulated compressed gradients converge to the true sum (validated in
+tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# one quantizer implementation: the gradient wire format IS the
+# optimizer's 8-bit moment format
+from repro.optim.adamw import dq8_rowwise as _dq8, q8_rowwise as _q8
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-compressed all-reduce over ``axis_name`` (shard_map axis).
+
+    Semantics match ``lax.psum(x, axis_name)`` up to quantization error
+    (bounded by n_devices * rowmax / 254). Wire payload per device:
+    1 byte/element + 4 bytes/row, vs 4 bytes/element dense."""
+    q, scale = _q8(x)
+    qg = jax.lax.all_gather(q, axis_name)          # (n, ...) int8
+    sg = jax.lax.all_gather(scale, axis_name)      # (n, ...) f32
+    return jnp.sum(_dq8(qg, sg), axis=0).astype(x.dtype)
+
+
+def wire_bytes(shape, dtype=jnp.float32, compressed: bool = False) -> int:
+    """Per-device payload bytes for one all-reduce of ``shape``
+    (benchmarks/bench_collectives.py reports dense vs compressed)."""
+    n_elems = 1
+    for d in shape:
+        n_elems *= int(d)
+    rows = n_elems // int(shape[-1]) if shape else 1
+    if compressed:
+        return n_elems + 4 * rows                  # int8 codes + f32 scales
+    return n_elems * jnp.dtype(dtype).itemsize
+
+
+def init_residuals(grads: Any) -> Any:
+    """Zero error-feedback residuals mirroring the gradient pytree."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress_grads(grads: Any, residuals: Any) -> Tuple[Any, Any]:
+    """Error-feedback compression of a gradient pytree.
+
+    Returns ``(compressed, new_residuals)`` where ``compressed`` is the
+    dequantized (wire-format) gradient and ``new_residuals`` carries the
+    quantization error into the next step:
+
+        comp_t = Q(g_t + r_{t-1});  r_t = g_t + r_{t-1} - comp_t
+    """
+    def one(g, r):
+        comp = g.astype(jnp.float32) + r
+        deq = _dq8(*_q8(comp))
+        return deq.astype(g.dtype), comp - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

@@ -1,0 +1,313 @@
+"""Sharding rules: PartitionSpec pytrees for every distributed artifact.
+
+Layout contract (DESIGN.md §4), derived per-leaf from the key path:
+
+  - Megatron TP over 'model': column-parallel projections (wq/wk/wv,
+    w_gate/w_up, mamba in-projections) shard their output dim; the
+    matching row-parallel projections (wo, w_down, w_out) shard their
+    input dim, so each block needs one all-reduce per mixer/MLP.
+  - ``cfg.fsdp`` additionally shards the *other* matrix dim over 'data'
+    (ZeRO-3 style weight sharding; gathered per layer under GSPMD).
+  - Embeddings are vocab-sharded over 'model' (the loss uses a one-hot
+    contraction, so no logits all-gather); falls back to d_model-sharding
+    when the vocab does not divide (e.g. mamba2's 50280).
+  - MoE experts: expert-parallel over 'model' when E % model == 0
+    (kimi 384e, jamba 16e), expert-TP over the intermediate dim otherwise
+    (mixtral 8e over 16).
+  - CUR-factorized dict leaves ({C, U0, dU, R} healing form, {CU, R}
+    folded serving form): C/CU inherit the dense weight's input-dim
+    sharding, R inherits the output-dim sharding, U0/dU (r, r) replicate.
+    The rank axis is never sharded (r <= 512 and it appears in every
+    factor).
+  - Optimizer moments mirror the param spec; int8-quantized state shards
+    codes like the param and row-scales like the param minus its last
+    axis (see ``optim.adamw.state_spec_from_param``).
+
+Every assignment is guarded by divisibility: an axis whose size does not
+divide the dim degrades to ``None`` (replicated) instead of crashing, so
+ragged dims (tiny smoke configs, B=1 long-context decode) always produce
+valid specs.
+
+On the multi-pod (pod, data, model) mesh, parameters keep their
+(data, model) layout (replicated across pods); batches shard over
+('pod', 'data').
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.optim.adamw import (
+    STATE_FULL_KEYS, STATE_SCALE_KEYS, state_spec_from_param)
+
+try:  # jax >= 0.4.31
+    from jax.sharding import AbstractMesh
+except ImportError:  # pragma: no cover
+    AbstractMesh = None
+
+# CUR dict leaf keys (healing and folded serving forms)
+_CUR_FULL = ("C", "CU")          # inherit input-dim sharding
+_CUR_RIGHT = ("R",)              # inherit output-dim sharding
+_CUR_CORE = ("U0", "dU")         # (r, r) core: replicated
+_CUR_KEYS = frozenset(_CUR_FULL + _CUR_RIGHT + _CUR_CORE)
+_STATE_KEYS = frozenset(STATE_FULL_KEYS) | frozenset(STATE_SCALE_KEYS)
+
+# column-parallel (..., in, out) weights: shard out over 'model', in over
+# 'data' when fsdp
+_COL_PARALLEL = frozenset((
+    "wq", "wk", "wv",                     # attention projections
+    "w_z", "w_x", "w_B", "w_C", "w_dt",   # mamba in-projections
+))
+# row-parallel (..., in, out) weights: shard in over 'model', out over 'data'
+_ROW_PARALLEL = frozenset(("wo", "w_out"))
+
+
+def abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Version-portable AbstractMesh((16, 16), ("data", "model"))."""
+    if AbstractMesh is None:  # pragma: no cover
+        raise RuntimeError("jax.sharding.AbstractMesh unavailable")
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, ax) -> int:
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0          # axis not on this mesh -> never divisible
+        size *= mesh.shape[a]
+    return size
+
+
+def _guard(shape: Tuple[int, ...], entries: Sequence[Any], mesh) -> P:
+    """Align ``entries`` to the trailing dims of ``shape``; replace any
+    non-divisible assignment with None. Returns a full-rank PartitionSpec
+    (or None when nothing is sharded)."""
+    entries = list(entries)[-len(shape):] if len(shape) else []
+    full = [None] * (len(shape) - len(entries)) + entries
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        out.append(ax if (size and dim % size == 0) else None)
+    if not any(a is not None for a in out):
+        return None
+    return P(*out)
+
+
+def _dp_axes(mesh):
+    """Batch axes: ('pod', 'data') on the multi-pod mesh, else 'data'."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+def _block_spec_at(path, cfg: ModelConfig):
+    """BlockSpec for a leaf under params['groups'][gi][pi], else None."""
+    for i, k in enumerate(path):
+        if k == "groups" and i + 2 < len(path):
+            gi, pi = path[i + 1], path[i + 2]
+            if isinstance(gi, int) and isinstance(pi, int):
+                try:
+                    return cfg.groups[gi][0][pi]
+                except (IndexError, TypeError):
+                    return None
+    return None
+
+
+def _split_path(path):
+    """-> (role key, cur part or None, state part or None).
+
+    The trailing special keys are peeled off in reverse: optimizer-state
+    keys sit innermost (moments of a CUR factor look like
+    [..., 'wq', 'C', 'm']), CUR factor keys next, and the first ordinary
+    key is the weight's role."""
+    cur = state = None
+    role = None
+    for k in reversed(path):
+        if not isinstance(k, str):
+            continue
+        if k in _STATE_KEYS and state is None and cur is None \
+                and role is None:
+            state = k
+            continue
+        if k in _CUR_KEYS and cur is None and role is None:
+            cur = k
+            continue
+        role = k
+        break
+    return role, cur, state
+
+
+def _dense_core(role: str, path, leaf_shape, cfg: ModelConfig, mesh):
+    """Core spec entries for the trailing dims of the *dense* weight named
+    ``role`` (2 entries, or 3 for per-expert MoE stacks). None = fully
+    replicated leaf."""
+    fs = "data" if cfg.fsdp else None
+    if role in _COL_PARALLEL:
+        return (fs, "model")
+    if role in _ROW_PARALLEL:
+        return ("model", fs)
+    if role == "router":
+        return (fs, None)
+    if role in ("w_gate", "w_up", "w_down"):
+        blk = _block_spec_at(path, cfg)
+        moe = (blk is not None and blk.mlp == "moe"
+               and "shared" not in path)
+        if not moe:
+            if role == "w_down":                   # (F, D) row-parallel
+                return ("model", fs)
+            return (fs, "model")                   # (D, F) column-parallel
+        n_model = _axis_size(mesh, "model")
+        ep = bool(n_model) and cfg.n_experts % n_model == 0
+        if role == "w_down":                       # (E, F, D)
+            return ("model", None, fs) if ep else (None, "model", fs)
+        # w_gate / w_up: (E, D, F)
+        return ("model", fs, None) if ep else (None, fs, "model")
+    if role == "embed":
+        V, D = leaf_shape[-2], leaf_shape[-1]
+        n_model = _axis_size(mesh, "model")
+        if n_model and V % n_model == 0:
+            return ("model", None)                 # vocab-sharded
+        return (None, "model")                     # fallback: shard d_model
+    if role == "out_head":
+        return (fs, "model")
+    return None                                    # norms, biases, scalars
+
+
+def _leaf_spec(path, leaf, cfg: ModelConfig, mesh) -> Optional[P]:
+    shape = tuple(leaf.shape)
+    role, cur, state = _split_path(path)
+    if role is None:
+        return None
+    # m_s / v_s scales of a 1-d param collapse to scalars per row; the
+    # dense-core shape argument must describe the *param*, so re-derive it
+    core_shape = shape
+    if state in STATE_SCALE_KEYS:
+        core_shape = shape + (1,)
+    core = _dense_core(role, path, core_shape, cfg, mesh)
+    if core is None:
+        return None
+    core = list(core)
+    if cur in _CUR_FULL:                 # (..., in, r)
+        core = core[:-1] + [None]
+    elif cur in _CUR_RIGHT:              # (..., r, out)
+        core = core[:-2] + [None, core[-1]]
+    elif cur in _CUR_CORE:               # (..., r, r)
+        core = core[:-2] + [None, None]
+    core = state_spec_from_param(core, state) if state else core
+    return _guard(shape, core, mesh)
+
+
+def _walk(node, path, fn):
+    if isinstance(node, dict):
+        return {k: _walk(v, path + (k,), fn) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_walk(v, path + (i,), fn) for i, v in enumerate(node)]
+    if isinstance(node, tuple):
+        return tuple(_walk(v, path + (i,), fn) for i, v in enumerate(node))
+    if node is None:
+        return None
+    return fn(path, node)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def param_pspecs(params, cfg: ModelConfig, mesh):
+    """PartitionSpec pytree mirroring ``params`` (arrays or
+    ShapeDtypeStructs). Dense weights follow the TP/FSDP layout contract;
+    CUR dict leaves ({C, U0, dU, R} / {CU, R}) are dispatched per factor."""
+    return _walk(params, (),
+                 lambda path, leaf: _leaf_spec(path, leaf, cfg, mesh))
+
+
+def opt_state_pspecs(opt_state, cfg: ModelConfig, mesh):
+    """Specs for an AdamW state ({'step', 'moments'}): moments inherit the
+    mirrored param's spec; int8-quantized codes keep it and their row
+    scales drop the last axis."""
+    return _walk(opt_state, (),
+                 lambda path, leaf: _leaf_spec(path, leaf, cfg, mesh))
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Input-batch specs: batch dim over ('pod',)'data', rest replicated."""
+    dp = _dp_axes(mesh)
+    B, L = shape.global_batch, shape.seq_len
+    specs = {"labels": _guard((B, L), [dp, None], mesh)}
+    if cfg.input_mode == "tokens":
+        specs["tokens"] = _guard((B, L), [dp, None], mesh)
+    else:
+        specs["embeds"] = _guard((B, L, cfg.d_model), [dp, None, None], mesh)
+    return specs
+
+
+def decode_batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(batch specs, pos spec) for one decode step."""
+    dp = _dp_axes(mesh)
+    B = shape.global_batch
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": _guard((B, 1), [dp, None], mesh)}
+    else:
+        batch = {"embeds": _guard((B, 1, cfg.d_model), [dp, None, None],
+                                  mesh)}
+    pos = _guard((B, 1), [dp, None], mesh)
+    return batch, pos
+
+
+def _cache_leaf_spec(path, leaf, cfg: ModelConfig, mesh):
+    """KV / SSM cache leaves. Batch shards over data; one more axis shards
+    over 'model', picked by first-divisible priority: kv-heads, then
+    head_dim / feature, then cache length."""
+    shape = tuple(leaf.shape)
+    dp = _dp_axes(mesh)
+    key = path[-1] if path and isinstance(path[-1], str) else None
+    nd = len(shape)
+    if key in ("k", "v") and nd >= 5:          # (reps, B, L, K, hd)
+        for cand in ([None, dp, None, "model", None],
+                     [None, dp, None, None, "model"],
+                     [None, dp, "model", None, None]):
+            spec = _guard(shape, cand, mesh)
+            if spec is not None and any(a == "model" for a in tuple(spec)):
+                return spec
+        return _guard(shape, [None, dp, None, None, None], mesh)
+    if key == "pos" and nd >= 3:               # (reps, B, L)
+        return _guard(shape, [None, dp, None], mesh)
+    if key == "state" and nd >= 5:             # (reps, B, nh, hp, N)
+        return _guard(shape, [None, dp, "model", None, None], mesh)
+    if key in ("conv_x", "conv_B", "conv_C") and nd >= 4:
+        return _guard(shape, [None, dp, None, "model"], mesh)
+    if nd >= 2:
+        return _guard(shape, [None, dp] + [None] * (nd - 2), mesh)
+    return None
+
+
+def cache_pspecs(cache, cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Specs for a prefill/decode cache pytree (stacked per scan group)."""
+    return _walk(cache, (),
+                 lambda path, leaf: _cache_leaf_spec(path, leaf, cfg, mesh))
+
+
+def to_named(specs, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree (None -> replicated).
+    The result feeds ``jax.jit`` in/out_shardings and ``jax.device_put``."""
+    def conv(s):
+        if s is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, s)
+    return jax.tree.map(
+        conv, specs,
+        is_leaf=lambda x: x is None or isinstance(x, P))

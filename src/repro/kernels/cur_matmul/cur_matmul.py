@@ -47,12 +47,33 @@ def _kernel(x_ref, cu_ref, r_ref, o_ref, t_ref):
 
 def cur_matmul(x, cu, r, *, bm: int = 256, bn: int = 256,
                interpret: bool = False):
-    """x (M, m) @ cu (m, rk) @ r (rk, n) -> (M, n)."""
+    """x (M, m) @ cu (m, rk) @ r (rk, n) -> (M, n).
+
+    Ragged M / n (decode batches, odd vocab slices) are padded up to the
+    block grid and sliced back after the call — XLA pads with zeros, the
+    zero rows/cols fall out of the matmuls, and the kernel body keeps its
+    aligned-tile fast path (no per-tile masking on the MXU)."""
     M, m = x.shape
     rk = cu.shape[1]
     n = r.shape[1]
     bm = min(bm, M)
     bn = min(bn, n)
+    Mp = -(-M // bm) * bm
+    np_ = -(-n // bn) * bn
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+    if np_ != n:
+        r = jnp.pad(r, ((0, 0), (0, np_ - n)))
+    y = _cur_matmul_aligned(x, cu, r, bm=bm, bn=bn, interpret=interpret)
+    if Mp != M or np_ != n:
+        y = y[:M, :n]
+    return y
+
+
+def _cur_matmul_aligned(x, cu, r, *, bm: int, bn: int, interpret: bool):
+    M, m = x.shape
+    rk = cu.shape[1]
+    n = r.shape[1]
     assert M % bm == 0 and n % bn == 0, (M, n, bm, bn)
     grid = (M // bm, n // bn)
 

@@ -28,9 +28,8 @@ def cur_matmul_op(x, cu, r, *, bm: int = 256, bn: int = 256):
     for d in lead:
         M *= d
     x2 = x.reshape(M, m)
-    bm_eff = bm if M % bm == 0 else M
     n = r.shape[1]
-    bn_eff = bn if n % bn == 0 else n
-    y = _kernel_call(x2, cu, r, bm=bm_eff, bn=bn_eff,
-                     interpret=not _on_tpu())
+    # ragged M / n are handled by the kernel's pad-and-slice path, so
+    # block sizes stay MXU-aligned regardless of the decode batch size
+    y = _kernel_call(x2, cu, r, bm=bm, bn=bn, interpret=not _on_tpu())
     return y.reshape(lead + (n,))

@@ -18,3 +18,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires enough host devices)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_recovery_mesh(plan, devices=None):
+    """Mesh for an elastic restart: ``plan`` is a
+    ``repro.dist.elastic.RecoveryPlan``. Uses the first
+    ``plan.active_chips`` healthy devices as (data, model) =
+    (new_data_parallel, tp_width); the remaining spares stay out of the
+    mesh for the repair controller."""
+    import numpy as np
+
+    devices = list(devices if devices is not None else jax.devices())
+    need = plan.active_chips
+    if len(devices) < need:
+        raise RuntimeError(
+            f"recovery plan needs {need} devices, have {len(devices)}")
+    grid = np.asarray(devices[:need], dtype=object).reshape(
+        plan.new_data_parallel, plan.tp_width)
+    return jax.sharding.Mesh(grid, ("data", "model"))

@@ -100,6 +100,23 @@ def structural_cur(params, cfg: ModelConfig, cur_cfg: CURConfig):
     return new
 
 
+def fold_cur_struct(params):
+    """Struct analogue of ``core.compress.fold_cur``: every healing-form
+    CUR dict {C, U0, dU, R} becomes the folded serving form {CU, R}
+    (C @ (U0 + dU) collapses to one (m, r) factor), so the dry-run can
+    lower the deployed inference layout."""
+    def is_cur(node):
+        return isinstance(node, dict) and set(node) == {"C", "U0", "dU", "R"}
+
+    def fold(node):
+        if not is_cur(node):
+            return node
+        C = node["C"]
+        return {"CU": S(C.shape, C.dtype), "R": node["R"]}
+
+    return jax.tree.map(fold, params, is_leaf=is_cur)
+
+
 def count_struct_params(tree) -> int:
     return sum(int(np.prod(l.shape))
                for l in jax.tree.leaves(tree) if hasattr(l, "shape"))

@@ -75,6 +75,42 @@ def _sqrt_noise_floor(scale):
     return jnp.sqrt(jnp.maximum(scale, 0.0))[..., None] / 254.0
 
 
+def q8_rowwise(x):
+    """Per-row absmax int8 quantization -> (codes, scales). The single
+    source of the 8-bit wire/state format shared by the optimizer moments
+    and the compressed gradient collectives (repro.dist.compression)."""
+    return _q8(x.astype(jnp.float32))
+
+
+def dq8_rowwise(q, scale):
+    return _dq8(q, scale, None)
+
+
+# ---------------------------------------------------------------------------
+# state layout (consumed by repro.dist.sharding.opt_state_pspecs)
+# ---------------------------------------------------------------------------
+
+# moment entries shaped exactly like the param: inherit its spec verbatim
+STATE_FULL_KEYS = ("m", "v", "m_q", "v_q")
+# per-row absmax scales shaped param.shape[:-1]: param spec minus last axis
+STATE_SCALE_KEYS = ("m_s", "v_s")
+
+
+def state_spec_from_param(param_entries, state_key: str):
+    """Map a param's spec entries to those of one optimizer-state leaf.
+
+    ``param_entries`` is a sequence of PartitionSpec axis assignments for
+    the param's trailing dims; the optimizer owns the knowledge of how its
+    state mirrors the param (codes keep the layout, scales drop the
+    quantization axis)."""
+    entries = list(param_entries)
+    if state_key in STATE_FULL_KEYS or state_key == "step":
+        return entries
+    if state_key in STATE_SCALE_KEYS:
+        return entries[:-1]
+    raise KeyError(f"unknown optimizer state key: {state_key}")
+
+
 # ---------------------------------------------------------------------------
 # optimizer
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, OptimizerConfig, TrainConfig
+from repro.dist.compression import ef_compress_grads, init_residuals
 from repro.models.model import loss_fn
 from repro.optim.adamw import AdamW
 
@@ -29,12 +30,39 @@ def make_train_step(cfg: ModelConfig, opt: AdamW,
     the micro-batch while the gradient all-reduce happens once per step
     (compute/comm overlap: XLA hoists the reduction out of the scan).
     """
+    return _make_step(cfg, opt, train_cfg, mesh, loss, compress=False)
+
+
+def _make_step(cfg, opt, train_cfg, mesh, loss, *, compress: bool):
+    """Single factory behind make_train_step / make_ef_train_step — the
+    gradient plumbing (microbatching, loss, update) stays one code path;
+    only the EF compression hook and the threaded residuals differ."""
     micro = train_cfg.microbatch if train_cfg else 0
 
     def loss_of(params, batch):
         return loss(params, cfg, batch, mesh)
 
-    def step(params, opt_state, batch):
+    grads_of = _make_grads_fn(loss_of, micro)
+
+    if compress:
+        def step(params, opt_state, residuals, batch):
+            l, grads = grads_of(params, batch)
+            grads, residuals = ef_compress_grads(grads, residuals)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, residuals, l
+    else:
+        def step(params, opt_state, batch):
+            l, grads = grads_of(params, batch)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, l
+
+    return step
+
+
+def _make_grads_fn(loss_of, micro: int):
+    """(params, batch) -> (loss, grads), with optional lax.scan
+    micro-batch accumulation."""
+    def grads_of(params, batch):
         if micro and batch["labels"].shape[0] > micro:
             B = batch["labels"].shape[0]
             n = B // micro
@@ -46,14 +74,25 @@ def make_train_step(cfg: ModelConfig, opt: AdamW,
                 return None, (l, g)
 
             _, (ls, gs) = jax.lax.scan(accum, None, mb)
-            l = ls.mean()
-            grads = jax.tree.map(lambda g: g.mean(axis=0), gs)
-        else:
-            l, grads = jax.value_and_grad(loss_of)(params, batch)
-        params, opt_state = opt.update(params, grads, opt_state)
-        return params, opt_state, l
+            return ls.mean(), jax.tree.map(lambda g: g.mean(axis=0), gs)
+        return jax.value_and_grad(loss_of)(params, batch)
+    return grads_of
 
-    return step
+
+def make_ef_train_step(cfg: ModelConfig, opt: AdamW,
+                       train_cfg: Optional[TrainConfig] = None, mesh=None,
+                       loss=loss_fn):
+    """Train step with error-feedback int8 gradient compression
+    (TrainConfig.grad_compress == "ef_int8"): gradients cross the
+    data-parallel collective in wire format (1 byte/elem + row scales) and
+    the quantization residual is carried between steps, so the compressor
+    bias cancels over training.
+
+    Returns step(params, opt_state, residuals, batch) ->
+    (params, opt_state, residuals, loss). Initialize residuals with
+    ``repro.dist.compression.init_residuals(params)``.
+    """
+    return _make_step(cfg, opt, train_cfg, mesh, loss, compress=True)
 
 
 # ---------------------------------------------------------------------------
@@ -86,16 +125,32 @@ class StragglerWatchdog:
 def train(params, cfg, opt_cfg: OptimizerConfig, batches,
           train_cfg: Optional[TrainConfig] = None, mesh=None,
           ckpt_manager=None, ckpt_every: int = 0, start_step: int = 0,
-          log_every: int = 0, watchdog: Optional[StragglerWatchdog] = None):
-    """Simple synchronous trainer used by examples and tests."""
+          log_every: int = 0, watchdog: Optional[StragglerWatchdog] = None,
+          opt_state=None, residuals=None):
+    """Simple synchronous trainer used by examples and tests.
+
+    ``opt_state`` / ``residuals`` seed the optimizer moments and the
+    error-feedback residuals on resume (restored from a checkpoint);
+    fresh state is initialized when omitted."""
     opt = AdamW(opt_cfg)
-    opt_state = opt.init(params)
-    step_fn = jax.jit(make_train_step(cfg, opt, train_cfg, mesh))
+    if opt_state is None:
+        opt_state = opt.init(params)
+    compress = bool(train_cfg) and train_cfg.grad_compress == "ef_int8"
+    if compress:
+        step_fn = jax.jit(make_ef_train_step(cfg, opt, train_cfg, mesh))
+        if residuals is None:
+            residuals = init_residuals(params)
+    else:
+        step_fn = jax.jit(make_train_step(cfg, opt, train_cfg, mesh))
     losses = []
     for i, batch in enumerate(batches):
         step = start_step + i
         t0 = time.perf_counter()
-        params, opt_state, l = step_fn(params, opt_state, batch)
+        if compress:
+            params, opt_state, residuals, l = step_fn(
+                params, opt_state, residuals, batch)
+        else:
+            params, opt_state, l = step_fn(params, opt_state, batch)
         l = float(l)
         dt = time.perf_counter() - t0
         if watchdog is not None:
@@ -105,6 +160,10 @@ def train(params, cfg, opt_cfg: OptimizerConfig, batches,
             print(f"step {step:5d} loss {l:.4f} ({dt*1e3:.0f} ms)")
         if ckpt_manager is not None and ckpt_every and \
                 (step + 1) % ckpt_every == 0:
-            ckpt_manager.save(step + 1, {"params": params,
-                                         "opt_state": opt_state})
+            state = {"params": params, "opt_state": opt_state}
+            if compress:
+                # EF residuals carry unsent gradient mass; dropping them
+                # on restart re-introduces the compressor bias
+                state["residuals"] = residuals
+            ckpt_manager.save(step + 1, state)
     return params, opt_state, losses

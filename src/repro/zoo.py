@@ -44,7 +44,7 @@ def get_trained_repro(steps: int = 300, quick: bool = False):
     params = init_params(jax.random.PRNGKey(0), cfg)
     got = mgr.latest_valid_step()
     if got is not None:
-        _, state = mgr.restore({"params": params})
+        _, state = mgr.restore({"params": params}, step=got)
         return state["params"], cfg
     ds = SyntheticLM(data_config(cfg))
     batches = (ds.batch_at(i) for i in range(steps))

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
 from repro.configs.base import CURConfig, OptimizerConfig, SHAPES, \
@@ -16,9 +16,11 @@ from repro.optim.adamw import AdamW
 
 
 def _mesh(multi_pod=False):
+    # shd.abstract_mesh papers over the AbstractMesh constructor change
+    # between jax 0.4.x and 0.5+
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return shd.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return shd.abstract_mesh((16, 16), ("data", "model"))
 
 
 def _check_divisible(tree, specs, mesh, tag):
@@ -101,6 +103,74 @@ def test_tp_sharding_assignments():
     mp = sp.param_specs(mix)
     ms = shd.param_pspecs(mp, mix, mesh)
     assert ms["groups"][0][0]["w_gate"] == P(None, None, "data", "model")
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "kimi-k2-1t-a32b",
+                                  "mamba2-1.3b"])
+def test_cur_folded_param_specs_divisible(arch):
+    """The deploy-time folded {CU, R} form must shard like the healing
+    form: CU inherits C's (input-dim) layout, R keeps the output dim."""
+    cfg = get_config(arch)
+    mesh = _mesh()
+    cur = sp.structural_cur(sp.param_specs(cfg), cfg, CURConfig())
+    folded = sp.fold_cur_struct(cur)
+    specs = shd.param_pspecs(folded, cfg, mesh)
+    _check_divisible(folded, specs, mesh, arch)
+    # spot-check dispatch on one folded leaf
+    blk = folded["groups"][0][0]
+    sblk = specs["groups"][0][0]
+    for t in cfg.cur_targets:
+        if t in blk and isinstance(blk[t], dict):
+            assert set(blk[t].keys()) == {"CU", "R"}
+            cur_blk = cur["groups"][0][0][t]
+            cur_spec = shd.param_pspecs(cur, cfg, mesh)["groups"][0][0][t]
+            assert sblk[t]["CU"] == cur_spec["C"], t   # same layout as C
+            assert sblk[t]["R"] == cur_spec["R"], t
+            assert blk[t]["CU"].shape == cur_blk["C"].shape
+            break
+    else:  # pragma: no cover
+        pytest.fail("no CUR dict leaf found")
+
+
+def test_to_named_roundtrip():
+    """to_named must preserve every spec verbatim (None -> replicated) on
+    an arbitrary nested pytree, so jit in_shardings see exactly the layout
+    contract the divisibility tests validated."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    specs = {
+        "groups": [[{"wq": P(None, "data", "model"),
+                     "wo": P(None, "model", "data"),
+                     "cur": {"C": P(None, "data", None),
+                             "U0": None,
+                             "R": P(None, None, "model")},
+                     "norm": None}]],
+        "embed": P("model", None),
+        "step": None,
+    }
+    named = shd.to_named(specs, mesh)
+    flat_s = jax.tree.flatten(
+        specs, is_leaf=lambda x: x is None or isinstance(x, P))[0]
+    flat_n = jax.tree.leaves(named)
+    assert len(flat_s) == len(flat_n)
+    for s, n in zip(flat_s, flat_n):
+        assert isinstance(n, jax.sharding.NamedSharding)
+        assert n.mesh.shape == mesh.shape
+        assert n.spec == (s if s is not None else P())
+
+
+def test_recovery_mesh_from_plan():
+    from repro.dist.elastic import plan_recovery
+    from repro.launch.mesh import make_recovery_mesh
+
+    plan = plan_recovery(total_chips=1, failed_chips=0, tp_width=1,
+                         resume_step=0)
+    m = make_recovery_mesh(plan)
+    assert m.devices.shape == (1, 1)
+    assert m.axis_names == ("data", "model")
+    big = plan_recovery(total_chips=512, failed_chips=16, tp_width=16,
+                        resume_step=7)
+    with pytest.raises(RuntimeError):
+        make_recovery_mesh(big)   # this host has 1 device, plan needs 256
 
 
 def test_structural_cur_reduces_params():
