@@ -21,6 +21,7 @@ MODULES = [
     "bench_activation_alignment", # Table 6
     "bench_kernels",              # kernel-level
     "bench_collectives",          # compressed vs dense psum payloads
+    "bench_serving",              # continuous batching vs static waves
     "bench_roofline",             # dry-run roofline table
 ]
 

@@ -301,6 +301,44 @@ def cache_pspecs(cache, cfg: ModelConfig, shape: ShapeConfig, mesh):
                  lambda path, leaf: _cache_leaf_spec(path, leaf, cfg, mesh))
 
 
+def _paged_leaf_spec(path, leaf, cfg: ModelConfig, mesh):
+    """Paged-pool leaves. Pools (L, n_blocks, bs, K, r): blocks are shared
+    by all sequences, so there is no batch axis — one axis shards over
+    'model' by first-divisible priority (kv-heads, then feature/rank,
+    then the block pool). CUR-KV projections and block tables replicate
+    (tiny / host-managed)."""
+    shape = tuple(leaf.shape)
+    key = path[-1] if path and isinstance(path[-1], str) else None
+    if key in ("k", "v") and len(shape) == 5:   # (L, nb, bs, K, r)
+        for cand in ([None, None, None, "model", None],
+                     [None, None, None, None, "model"],
+                     [None, "model", None, None, None]):
+            spec = _guard(shape, cand, mesh)
+            if spec is not None and any(a == "model" for a in tuple(spec)):
+                return spec
+    return None
+
+
+def paged_cache_pspecs(cache, cfg: ModelConfig, mesh):
+    """Specs for a ``repro.serving.paged_cache`` pool pytree."""
+    return _walk(cache, (),
+                 lambda path, leaf: _paged_leaf_spec(path, leaf, cfg, mesh))
+
+
+def paged_decode_pspecs(cfg: ModelConfig, batch: int, max_blocks: int, mesh):
+    """(tokens, table, ctx_len, active) specs for one paged decode step:
+    every slot-batch-dim input — including each slot's block-table row —
+    shards over ('pod',)'data'; the pool itself has no data-axis sharding
+    (see ``paged_cache_pspecs``), so each shard gathers its slots' blocks
+    from the shared pool."""
+    dp = _dp_axes(mesh)
+    tokens = _guard((batch, 1), [dp, None], mesh)
+    table = _guard((batch, max_blocks), [dp, None], mesh)
+    ctx = _guard((batch,), [dp], mesh)
+    active = _guard((batch,), [dp], mesh)
+    return tokens, table, ctx, active
+
+
 def to_named(specs, mesh):
     """PartitionSpec pytree -> NamedSharding pytree (None -> replicated).
     The result feeds ``jax.jit`` in/out_shardings and ``jax.device_put``."""

@@ -55,7 +55,8 @@ def _scalable_reps(cfg) -> int:
     return rs[0] if rs else 1
 
 
-def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int):
+def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int,
+                  paged: bool = False):
     """Lower + compile one artifact. Returns (compiled, lower_s,
     compile_s)."""
     params = sp.param_specs(cfg)
@@ -65,7 +66,29 @@ def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int):
     p_sh = _named(p_specs, mesh)
 
     t0 = time.time()
-    if shape.kind == "train":
+    if paged and shape.kind == "decode":
+        from repro.serving import runtime as srt
+        srt.check_supported(cfg)
+        cache, pc = sp.paged_cache_specs(cfg, shape)
+        c_specs = shd.paged_cache_pspecs(cache, cfg, mesh)
+        c_sh = _named(c_specs, mesh)
+        tokens, table, ctx, active = sp.paged_decode_input_specs(
+            cfg, shape, pc)
+        in_specs = shd.paged_decode_pspecs(
+            cfg, shape.global_batch, pc.max_blocks_per_seq, mesh)
+        in_sh = tuple(_named(s, mesh) for s in in_specs)
+
+        def paged_step(params, tokens, cache, table, ctx, active):
+            return srt.paged_decode(params, cfg, pc, tokens, cache,
+                                    table, ctx, active, mesh)
+
+        jitted = jax.jit(
+            paged_step,
+            in_shardings=(p_sh, in_sh[0], c_sh, in_sh[1], in_sh[2],
+                          in_sh[3]),
+            out_shardings=(None, c_sh))
+        lowered = jitted.lower(params, tokens, cache, table, ctx, active)
+    elif shape.kind == "train":
         # quantized moments for the >=100B configs (8-bit-Adam; DESIGN §4)
         quant = cfg.param_count() > 1e11
         opt = AdamW(OptimizerConfig(quantized_state=quant))
@@ -133,7 +156,7 @@ def _cost_triple(compiled):
 
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
-               cur: bool = False, microbatch: int = 0,
+               cur: bool = False, microbatch: int = 0, paged: bool = False,
                verbose: bool = True, extrapolate: bool = True):
     """Lower + compile one (arch, shape, mesh) cell.
 
@@ -151,22 +174,36 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "status": "SKIP",
                 "cur": cur, "mesh": "2x16x16" if multi_pod else "16x16",
                 "reason": "full-attention arch at 500k (DESIGN.md §5)"}
+    if paged:
+        from repro.serving.paged_cache import supports as paged_supports
+        if shape.kind != "decode":
+            return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                    "cur": cur, "paged": True,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "reason": "paged runtime is decode-only"}
+        if not paged_supports(cfg):
+            return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                    "cur": cur, "paged": True,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "reason": "paged runtime needs attention mixers"}
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     chips = mesh.devices.size
 
     compiled, t_lower, t_compile = _compile_cell(
-        cfg, shape, mesh, cur=cur, microbatch=microbatch)
+        cfg, shape, mesh, cur=cur, microbatch=microbatch, paged=paged)
     mem = compiled.memory_analysis()
     raw_flops, raw_bytes, raw_ess, raw_coll = _cost_triple(compiled)
 
     R = _scalable_reps(cfg)
     if extrapolate and R > 1:
         c1, _, t1 = _compile_cell(_reduced_cfg(cfg, 1), shape, mesh,
-                                  cur=cur, microbatch=microbatch)
+                                  cur=cur, microbatch=microbatch,
+                                  paged=paged)
         f1, b1, e1, coll1 = _cost_triple(c1)
         c2, _, t2 = _compile_cell(_reduced_cfg(cfg, 2), shape, mesh,
-                                  cur=cur, microbatch=microbatch)
+                                  cur=cur, microbatch=microbatch,
+                                  paged=paged)
         f2, b2, e2, coll2 = _cost_triple(c2)
 
         def _extrap(x1, x2):
@@ -216,7 +253,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     )
     result = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
-        "cur": cur, "status": "OK", "cost_basis": cost_basis,
+        "cur": cur, "paged": paged, "status": "OK",
+        "cost_basis": cost_basis,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "compile_extra_s": t_compile_extra,
         "argument_gib_per_dev": round(
@@ -260,6 +298,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--cur", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="decode shapes: compile the repro.serving paged "
+                         "block-table runtime instead of the dense cache")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--no-extrapolate", action="store_true",
                     help="single compile per cell (multi-pod pass: proves "
@@ -282,6 +323,7 @@ def main():
                 try:
                     r = lower_cell(arch, shape, multi_pod=mp, cur=args.cur,
                                    microbatch=args.microbatch,
+                                   paged=args.paged,
                                    extrapolate=not args.no_extrapolate)
                 except Exception as e:  # noqa: BLE001 — record & continue
                     traceback.print_exc()

@@ -1,13 +1,19 @@
-"""Serving entry point: batched generation over a (optionally
-CUR-compressed) model.
+"""Serving entry point: continuous-batching runtime over an (optionally
+CUR-compressed) model with a paged, optionally CUR-compressed KV cache.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-      --batch 4 --new-tokens 16 [--cur-layers 2]
+      --max-concurrency 8 [--cur-layers 2] [--cur-kv] [--block-size 16]
+
+``--smoke`` drives a mixed workload — ragged prompt lengths, staggered
+arrivals, per-request generation budgets — through the
+``repro.serving.Server``. ``--legacy`` (or a non-attention arch, e.g.
+mamba) falls back to the static-batch ``serve.engine.generate`` path.
 """
 import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import CURConfig
@@ -15,29 +21,95 @@ from repro.core import calibrate, compress_model
 from repro.data.tokens import DataConfig, SyntheticLM
 from repro.models import init_params
 from repro.serve.engine import generate
+from repro.serving import PagedConfig, SamplingParams, Server
+from repro.serving.paged_cache import supports as paged_supports
+
+
+def make_workload(n_requests: int, vocab: int, *, max_new: int = 16,
+                  seed: int = 0, arrival_spacing_s: float = 0.02):
+    """Mixed smoke workload: ragged prompts (8..40 tokens), per-request
+    new-token budgets (4..max_new), staggered arrival offsets."""
+    rng = np.random.RandomState(seed)
+    lo = max(1, min(4, max_new))
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.choice([8, 12, 16, 24, 32, 40]))
+        n_new = int(rng.randint(lo, max_new + 1))
+        reqs.append({
+            "prompt": rng.randint(0, vocab, size=plen).tolist(),
+            "max_new_tokens": n_new,
+            "arrival_offset_s": i * arrival_spacing_s,
+        })
+    return reqs
+
+
+def run_continuous(server: Server, workload, *, temperature: float = 0.0,
+                   verbose: bool = True):
+    """Submit each request when its arrival time passes; drive the engine
+    between arrivals. Returns (finished dict, stats dict)."""
+    t0 = time.perf_counter()
+    pending = sorted(workload, key=lambda r: r["arrival_offset_s"])
+    i = 0
+    while i < len(pending) or not server.idle:
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i]["arrival_offset_s"] <= now:
+            r = pending[i]
+            sp = SamplingParams(temperature=temperature, seed=i)
+            server.submit(r["prompt"], r["max_new_tokens"], sampling=sp)
+            i += 1
+        if not server.step() and i < len(pending):
+            # idle but arrivals outstanding: wait for the next one
+            time.sleep(max(0.0,
+                           pending[i]["arrival_offset_s"] - now))
+    stats = server.stats()
+    if verbose:
+        print(f"completed {stats['completed']} requests, "
+              f"{stats['tokens_generated']} tokens in "
+              f"{stats['elapsed_s']:.2f}s "
+              f"({stats['tokens_per_s']:.1f} tok/s)")
+        print(f"ttft mean {stats['ttft_mean_s']*1e3:.0f}ms "
+              f"max {stats['ttft_max_s']*1e3:.0f}ms | queue depth "
+              f"mean {stats['queue_depth_mean']:.1f} "
+              f"max {stats['queue_depth_max']} | "
+              f"steps prefill={stats['n_prefill_steps']} "
+              f"decode={stats['n_decode_steps']} "
+              f"preempt={stats['n_preemptions']}")
+        print(f"kv cache: {stats['cache_bytes']/2**20:.2f} MiB")
+    return server.finished, stats
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b", choices=list(ARCHS))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="legacy static-batch size")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--cur-layers", type=int, default=0)
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--cur-layers", type=int, default=0,
+                    help="CUR-compress this many layers (weights)")
+    ap.add_argument("--cur-kv", action="store_true",
+                    help="CUR-compress the paged KV cache")
+    ap.add_argument("--kv-rank", type=int, default=0,
+                    help="CUR-KV rank (0: head_dim // 2)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-concurrency", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="seed static-batch engine instead of the "
+                         "continuous-batching runtime")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.input_mode != "tokens":
         raise SystemExit(f"{args.arch} uses the embeddings stub")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
-                                seq_len=args.prompt_len,
-                                global_batch=args.batch))
-    prompts = ds.batch_at(0)["tokens"]
 
     if args.cur_layers:
+        ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.prompt_len,
+                                    global_batch=args.batch))
         calib = calibrate(params, cfg, [ds.batch_at(1)])
         params, cfg, info = compress_model(
             params, cfg,
@@ -47,13 +119,42 @@ def main():
         print(f"CUR-compressed {info.layers} "
               f"({info.params_saved/1e3:.0f}k params saved)")
 
-    t0 = time.perf_counter()
-    out = generate(params, cfg, prompts, args.new_tokens,
-                   temperature=args.temperature)
-    dt = time.perf_counter() - t0
-    print(f"generated {out.tokens.size} tokens in {dt:.2f}s "
-          f"({out.tokens.size/dt:.1f} tok/s)")
-    print(out.tokens[:2])
+    if args.legacy or not paged_supports(cfg):
+        if not args.legacy:
+            print(f"{args.arch}: non-attention mixers -> legacy engine")
+        ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.prompt_len,
+                                    global_batch=args.batch))
+        prompts = ds.batch_at(0)["tokens"]
+        t0 = time.perf_counter()
+        out = generate(params, cfg, prompts, args.new_tokens,
+                       temperature=args.temperature)
+        dt = time.perf_counter() - t0
+        print(f"generated {out.tokens.size} tokens in {dt:.2f}s "
+              f"({out.tokens.size/dt:.1f} tok/s)")
+        print(out.tokens[:2])
+        return
+
+    workload = make_workload(args.n_requests, cfg.vocab_size,
+                             max_new=args.new_tokens)
+    max_len = max(len(r["prompt"]) + r["max_new_tokens"]
+                  for r in workload)
+    kv_rank = 0
+    if args.cur_kv:
+        kv_rank = args.kv_rank or max(1, cfg.resolved_head_dim // 2)
+    pc = PagedConfig.sized_for(
+        max_len, args.max_concurrency, block_size=args.block_size,
+        cur_kv=args.cur_kv, kv_rank=kv_rank)
+    server = Server(params, cfg, pc,
+                    max_concurrency=args.max_concurrency)
+    print(f"serving {args.n_requests} requests "
+          f"(concurrency {args.max_concurrency}, block {args.block_size}, "
+          f"pool {pc.n_blocks} blocks, cur_kv={args.cur_kv})")
+    finished, _ = run_continuous(server, workload,
+                                 temperature=args.temperature)
+    first = finished[min(finished)]
+    print(f"request 0: {len(first.out_tokens)} tokens "
+          f"{first.out_tokens[:8]}{'...' if len(first.out_tokens) > 8 else ''}")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,41 @@ def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
 
 
 # ---------------------------------------------------------------------------
+# paged serving (repro.serving) decode-shape stand-ins
+# ---------------------------------------------------------------------------
+
+def paged_config_for(shape: ShapeConfig, block_size: int = 128):
+    """PagedConfig sized so ``global_batch`` sequences of ``seq_len``
+    tokens fit exactly (the dry-run's worst-case residency)."""
+    from repro.serving.paged_cache import PagedConfig
+    maxb = -(-shape.seq_len // block_size)
+    return PagedConfig(block_size=block_size,
+                       n_blocks=shape.global_batch * maxb,
+                       max_blocks_per_seq=maxb)
+
+
+def paged_cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      block_size: int = 128):
+    """ShapeDtypeStructs for the paged k/v pool at a decode shape."""
+    from repro.serving.paged_cache import init_paged_cache
+    pc = paged_config_for(shape, block_size)
+    return jax.eval_shape(lambda: init_paged_cache(cfg, pc)), pc
+
+
+def paged_decode_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                             pc=None, block_size: int = 128):
+    """(tokens, table, ctx_len, active) for one paged decode step. Pass
+    the PagedConfig returned by :func:`paged_cache_specs` so the table
+    width always matches the pool layout."""
+    if pc is None:
+        pc = paged_config_for(shape, block_size)
+    B = shape.global_batch
+    return (S((B, 1), jnp.int32),
+            S((B, pc.max_blocks_per_seq), jnp.int32),
+            S((B,), jnp.int32), S((B,), jnp.bool_))
+
+
+# ---------------------------------------------------------------------------
 # structural CUR (dry-run compression)
 # ---------------------------------------------------------------------------
 

@@ -34,6 +34,20 @@ def make_prefill(cfg: ModelConfig, mesh=None):
     return prefill_fn
 
 
+# jit cache keyed by (cfg, mesh): ``generate`` used to rebuild (and so
+# recompile) its step functions on every call — ruinous for wave-batched
+# serving where the same shapes recur
+_JIT_CACHE: dict = {}
+
+
+def _jitted_steps(cfg: ModelConfig, mesh=None):
+    key = (cfg, None if mesh is None else id(mesh))
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = (jax.jit(make_prefill(cfg, mesh)),
+                           jax.jit(make_serve_step(cfg, mesh)))
+    return _JIT_CACHE[key]
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: jnp.ndarray         # (B, n_new)
@@ -47,8 +61,7 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, n_new: int,
     B, S = prompts.shape
     max_len = S + n_new
     cache = init_cache(cfg, B, max_len)
-    pf = jax.jit(make_prefill(cfg, mesh))
-    st = jax.jit(make_serve_step(cfg, mesh))
+    pf, st = _jitted_steps(cfg, mesh)
     logits, cache = pf(params, cache, {"tokens": prompts})
 
     key = jax.random.PRNGKey(seed)
@@ -61,13 +74,20 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, n_new: int,
         else:
             nxt = jnp.argmax(logits, axis=-1)
         lp = jax.nn.log_softmax(logits, axis=-1)
-        lps.append(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0])
+        lp_nxt = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+        # freeze finished sequences: emit eos with logprob 0 instead of
+        # continuing to sample (their cache writes are position-idempotent)
+        if eos_id is not None:
+            nxt = jnp.where(done, eos_id, nxt)
+            lp_nxt = jnp.where(done, 0.0, lp_nxt)
+        toks.append(nxt)
+        lps.append(lp_nxt)
         if eos_id is not None:
             done = done | (nxt == eos_id)
-        toks.append(nxt)
-        pos = jnp.full((B, 1), S + t, jnp.int32)
-        logits, cache = st(params, cache, {"tokens": nxt[:, None]}, pos)
-        if eos_id is not None and bool(done.all()):
-            break
+            if bool(done.all()):
+                break           # all retired: stop burning decode steps
+        if t + 1 < n_new:
+            pos = jnp.full((B, 1), S + t, jnp.int32)
+            logits, cache = st(params, cache, {"tokens": nxt[:, None]}, pos)
     return GenerationResult(tokens=jnp.stack(toks, axis=1),
                             logprobs=jnp.stack(lps, axis=1))

@@ -1,0 +1,23 @@
+"""repro.serving — continuous-batching inference runtime.
+
+Layered as:
+
+  server.Server        synchronous submit/step/drain front-end + stats
+      scheduler.Scheduler   admission queue, slots, preemption policy
+          paged_cache       block-table paged KV pool (+ CUR-KV mode)
+          runtime           paged prefill / decode model steps
+          sampling          vectorized per-request token sampling
+"""
+from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.server import Server
+
+__all__ = [
+    "BlockAllocator",
+    "PagedConfig",
+    "Request",
+    "SamplingParams",
+    "Scheduler",
+    "Server",
+]

@@ -1,0 +1,248 @@
+"""Paged model steps: prefill / decode over the block-table KV pool.
+
+Mirrors ``models.model``'s cached forward but threads the shared paged
+pool instead of per-sequence dense caches. Both entry points run over a
+fixed ``B = max_concurrency`` slot batch (inactive rows are masked), so
+each compiles once per prefill bucket and once for decode — the shapes a
+continuous-batching scheduler feeds them never change mid-run. Ragged
+prompt batches are padded up to power-of-two buckets, which keeps the
+folded-CUR weight matmuls on the ``cur_matmul`` pad-and-slice fast path
+(MXU-aligned block sizes regardless of admitted batch raggedness).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MLP, MOE, ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_w, norm
+from repro.models.mlp import mlp_forward
+from repro.models.model import _embed, _unembed
+from repro.models.moe import moe_forward
+from repro.serving import paged_cache as pcache
+
+NEG_INF = attn.NEG_INF
+
+
+def iter_blocks(params, cfg: ModelConfig):
+    """Yield (layer_idx, spec, per-layer params) in network order —
+    scan-stacked groups are unrolled (paged serving traces per layer)."""
+    li = 0
+    for gi, (pattern, reps) in enumerate(cfg.groups):
+        for r in range(reps):
+            for pi, spec in enumerate(pattern):
+                lp = jax.tree.map(lambda a: a[r], params["groups"][gi][pi])
+                yield li, spec, lp
+                li += 1
+
+
+def check_supported(cfg: ModelConfig) -> None:
+    if not pcache.supports(cfg):
+        raise ValueError(
+            f"{cfg.name}: paged serving supports attention mixers only "
+            "(mamba state is not paged); use serve.engine.generate")
+
+
+def _layer_proj(cache: dict, li: int):
+    """(qk, uk, qv, uv) for layer li, or Nones when not in CUR-KV mode."""
+    proj = cache.get("proj")
+    if proj is None:
+        return None, None, None, None
+    return (proj["qk"][li], proj["uk"][li],
+            proj["qv"][li], proj["uv"][li])
+
+
+def _channel_mix(x, p, spec, cfg, mesh):
+    if spec.mlp == MLP:
+        x = x + mlp_forward(norm(x, p.get("norm2"), cfg), p, cfg)
+    elif spec.mlp == MOE:
+        x = x + moe_forward(norm(x, p.get("norm2"), cfg), p, cfg, mesh)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def paged_prefill(params, cfg: ModelConfig, pc: pcache.PagedConfig,
+                  tokens: jnp.ndarray, lengths: jnp.ndarray,
+                  cache: dict, table: jnp.ndarray, mesh=None):
+    """Process padded ragged prompts, writing roped K/V into the pool.
+
+    tokens (B, S) right-padded; lengths (B,) true prompt lengths (0 =
+    inactive slot); table (B, maxb) block ids (-1 pad). Returns
+    (last-real-token logits (B, V), new cache)."""
+    check_supported(cfg)
+    x = _embed(params, cfg, {"tokens": tokens})
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    scale = cfg.resolved_head_dim ** -0.5
+    new_k, new_v = cache["k"], cache["v"]
+    for li, spec, p in iter_blocks(params, cfg):
+        win = cfg.window if spec.mixer == ATTN_LOCAL else 0
+        h = norm(x, p.get("norm1"), cfg)
+        q, k, v = attn.qkv_project(h, p, cfg, positions)
+        qg = attn._group_q(q, cfg.n_kv_heads)
+        o = attn._mix(qg, k, v, positions, win, scale, cfg)
+        o = o.reshape(B, S, -1)
+        x = x + apply_w(o, p["wo"])
+        qk, _, qv, _ = _layer_proj(cache, li)
+        new_k = new_k.at[li].set(pcache.write_prompt(
+            new_k[li], pcache.compress_kv(k, qk), table, lengths,
+            pc.block_size))
+        new_v = new_v.at[li].set(pcache.write_prompt(
+            new_v[li], pcache.compress_kv(v, qv), table, lengths,
+            pc.block_size))
+        x = _channel_mix(x, p, spec, cfg, mesh)
+    x = norm(x, params.get("final_norm"), cfg)
+    last = jnp.clip(lengths - 1, 0, S - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    logits = _unembed(params, cfg, x_last)[:, 0, :]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_k, new_v
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def paged_decode(params, cfg: ModelConfig, pc: pcache.PagedConfig,
+                 tokens: jnp.ndarray, cache: dict, table: jnp.ndarray,
+                 ctx_len: jnp.ndarray, active: jnp.ndarray, mesh=None):
+    """One decode step for every active slot.
+
+    tokens (B, 1) last sampled token per slot; ctx_len (B,) tokens already
+    in cache (the new token is written at that position); active (B,)
+    bool. Returns (logits (B, V), new cache)."""
+    check_supported(cfg)
+    x = _embed(params, cfg, {"tokens": tokens})
+    B = x.shape[0]
+    pos = ctx_len[:, None].astype(jnp.int32)              # (B, 1)
+    scale = cfg.resolved_head_dim ** -0.5
+    L = table.shape[1] * pc.block_size
+    kv_idx = jnp.arange(L, dtype=jnp.int32)
+    new_k, new_v = cache["k"], cache["v"]
+    for li, spec, p in iter_blocks(params, cfg):
+        win = cfg.window if spec.mixer == ATTN_LOCAL else 0
+        h = norm(x, p.get("norm1"), cfg)
+        q, k, v = attn.qkv_project(h, p, cfg, pos)        # (B, 1, ., hd)
+        qk, uk, qv, uv = _layer_proj(cache, li)
+        new_k = new_k.at[li].set(pcache.write_token(
+            new_k[li], pcache.compress_kv(k[:, 0], qk), table,
+            ctx_len, active, pc.block_size))
+        new_v = new_v.at[li].set(pcache.write_token(
+            new_v[li], pcache.compress_kv(v[:, 0], qv), table,
+            ctx_len, active, pc.block_size))
+        ck = pcache.reconstruct_kv(pcache.gather_kv(new_k[li], table), uk)
+        cv = pcache.reconstruct_kv(pcache.gather_kv(new_v[li], table), uv)
+        qg = attn._group_q(q, cfg.n_kv_heads)             # (B, 1, K, G, hd)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, ck).astype(jnp.float32)
+        s = s * scale
+        valid = kv_idx[None, :] <= ctx_len[:, None]       # includes new tok
+        if win > 0:
+            valid &= kv_idx[None, :] > (ctx_len[:, None] - win)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqt,btkd->bqkgd", pr.astype(cv.dtype), cv)
+        o = o.reshape(B, 1, -1)
+        x = x + apply_w(o, p["wo"])
+        x = _channel_mix(x, p, spec, cfg, mesh)
+    x = norm(x, params.get("final_norm"), cfg)
+    logits = _unembed(params, cfg, x)[:, 0, :]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_k, new_v
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# multi-step decode (host-sync amortization)
+# ---------------------------------------------------------------------------
+
+def paged_decode_scan(params, cfg: ModelConfig, pc: pcache.PagedConfig,
+                      tokens, cache, table, ctx, active, budgets,
+                      base_keys, gen_starts, temps, top_ks, top_ps,
+                      n_steps: int, mesh=None, greedy: bool = False):
+    """``n_steps`` decode+sample iterations in one compiled scan.
+
+    Sampled tokens feed the next step on-device, so the host syncs once
+    per window instead of once per token — the throughput edge the
+    static seed path gets from free-running its whole decode loop. Rows
+    whose generation budget fills mid-window freeze in place: their pool
+    writes are masked off (the scheduler reserved blocks only for each
+    row's real remainder) and the host discards their surplus tokens.
+    Stop-token retirement needs a per-token host check, so the scheduler
+    only opens windows when no live request carries one.
+
+    budgets (B,): per-slot ``max_new_tokens``; base_keys (B, 2):
+    fold_in(PRNGKey(seed), rid) per request — folding in the per-slot
+    generated-token index reproduces ``request_key`` exactly, so
+    multi-step and single-step sampling streams are identical.
+    ``greedy`` (static) compiles an argmax-only sampler — the nucleus
+    machinery is all sorts, pure overhead when no live request needs it."""
+    from repro.serving.sampling import _sample_one
+
+    def body(carry, i):
+        toks, c, cx = carry
+        live = active & (gen_starts + i < budgets)
+        logits, c = paged_decode(params, cfg, pc, toks, c, table, cx,
+                                 live, mesh)
+        lg32 = logits.astype(jnp.float32)
+        if greedy:
+            logp = jax.nn.log_softmax(lg32)
+            s_toks = jnp.argmax(lg32, axis=-1).astype(jnp.int32)
+            s_lps = jnp.take_along_axis(logp, s_toks[:, None],
+                                        axis=-1)[:, 0]
+        else:
+            keys = jax.vmap(jax.random.fold_in)(base_keys, gen_starts + i)
+            s_toks, s_lps = jax.vmap(_sample_one)(
+                lg32, temps, top_ks, top_ps, keys)
+        return (s_toks[:, None], c, cx + 1), (s_toks, s_lps)
+
+    (_, cache, _), (toks_seq, lps_seq) = jax.lax.scan(
+        body, (tokens, cache, ctx), jnp.arange(n_steps))
+    return toks_seq, lps_seq, cache
+
+
+# ---------------------------------------------------------------------------
+# CUR-KV calibration
+# ---------------------------------------------------------------------------
+
+def collect_kv(params, cfg: ModelConfig, tokens: jnp.ndarray
+               ) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
+    """Dense forward over a calibration batch collecting every attention
+    layer's roped K/V (B, S, K, hd) — input to the DEIM column selection."""
+    check_supported(cfg)
+    x = _embed(params, cfg, {"tokens": tokens})
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    scale = cfg.resolved_head_dim ** -0.5
+    ks, vs = [], []
+    for li, spec, p in iter_blocks(params, cfg):
+        win = cfg.window if spec.mixer == ATTN_LOCAL else 0
+        h = norm(x, p.get("norm1"), cfg)
+        q, k, v = attn.qkv_project(h, p, cfg, positions)
+        ks.append(k)
+        vs.append(v)
+        qg = attn._group_q(q, cfg.n_kv_heads)
+        o = attn._mix(qg, k, v, positions, win, scale, cfg)
+        x = x + apply_w(o.reshape(B, S, -1), p["wo"])
+        x = _channel_mix(x, p, spec, cfg, None)
+    return ks, vs
+
+
+def calibrate_kv(params, cfg: ModelConfig, pc: pcache.PagedConfig,
+                 cache: dict, tokens: jnp.ndarray) -> dict:
+    """Fill ``cache['proj']`` from a calibration prompt batch."""
+    if not pc.cur_kv:
+        return cache
+    r = pc.rank(cfg.resolved_head_dim)
+    ks, vs = collect_kv(params, cfg, tokens)
+    new = dict(cache)
+    new["proj"] = pcache.projections_from_kv(ks, vs, r)
+    return new

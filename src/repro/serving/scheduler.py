@@ -1,0 +1,206 @@
+"""Continuous-batching scheduler: admission queue, slot table, preemption.
+
+Pure host-side bookkeeping — the scheduler never touches device arrays.
+Each engine iteration it emits one :class:`Plan`:
+
+  - ``prefill``: newly admitted requests (slot, request) whose prompts
+    (plus, for preemption-restored requests, their already-generated
+    tokens) are prefetched into freshly allocated blocks in one ragged,
+    bucket-padded batch;
+  - ``decode``: one token for every running slot;
+  - ``idle``: nothing runnable (queue empty or blocked on arrivals).
+
+Prefill has priority (vLLM-style): admitting early keeps the decode batch
+full. When the block pool runs dry mid-decode, the most-recently-admitted
+victim is preempted by eviction — all its blocks are freed and it rejoins
+the *front* of the queue carrying its generated tokens, so re-admission
+re-prefills prompt+generated and decoding continues bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    # --- filled by the runtime ---------------------------------------
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    out_logprobs: List[float] = dataclasses.field(default_factory=list)
+    ttft: Optional[float] = None          # first-token latency (s)
+    finish_time: Optional[float] = None
+    finish_reason: Optional[str] = None   # "eos" | "length"
+    n_preempted: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+
+@dataclasses.dataclass
+class Slot:
+    req: Request
+    blocks: List[int]
+    ctx_len: int            # tokens currently materialized in the pool
+    next_token: int         # sampled but not yet written to the pool
+    admit_seq: int          # admission order (newest preempted first)
+
+
+@dataclasses.dataclass
+class Plan:
+    kind: str                                   # "prefill"|"decode"|"idle"
+    prefill: List[Tuple[int, Request]] = dataclasses.field(
+        default_factory=list)
+
+
+class Scheduler:
+    def __init__(self, pc: PagedConfig, max_concurrency: int):
+        self.pc = pc
+        self.max_concurrency = max_concurrency
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Slot]] = [None] * max_concurrency
+        self.alloc = BlockAllocator(pc.n_blocks)
+        self._admit_seq = 0
+        self.n_preemptions = 0
+
+    # -- introspection -------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active_slots
+
+    # -- admission -----------------------------------------------------
+    def add(self, req: Request) -> None:
+        need = self.pc.blocks_for(len(req.prompt) + req.max_new_tokens)
+        if need > self.pc.n_blocks or need > self.pc.max_blocks_per_seq:
+            raise ValueError(
+                f"request {req.rid}: {len(req.prompt)}+{req.max_new_tokens}"
+                f" tokens exceed the pool "
+                f"({self.pc.n_blocks}x{self.pc.block_size} blocks, "
+                f"table width {self.pc.max_blocks_per_seq})")
+        self.queue.append(req)
+
+    def _prefill_len(self, req: Request) -> int:
+        """Tokens to materialize on (re-)admission: prompt plus all
+        generated-but-one (the last generated token is the next decode
+        input, exactly as if the request was never preempted)."""
+        return len(req.prompt) + max(0, len(req.out_tokens) - 1)
+
+    def _try_admit(self) -> List[Tuple[int, Request]]:
+        admitted = []
+        free_slots = [i for i, s in enumerate(self.slots) if s is None]
+        while self.queue and free_slots:
+            req = self.queue[0]
+            n_pre = self._prefill_len(req)
+            # +1 headroom so the first decode write always has a slot
+            need = self.pc.blocks_for(n_pre + 1)
+            blocks = self.alloc.alloc(need)
+            if blocks is None:
+                break
+            self.queue.popleft()
+            slot_id = free_slots.pop(0)
+            self.slots[slot_id] = Slot(
+                req=req, blocks=blocks, ctx_len=n_pre,
+                next_token=(req.out_tokens[-1] if req.out_tokens else -1),
+                admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            admitted.append((slot_id, req))
+        return admitted
+
+    # -- decode capacity / preemption ----------------------------------
+    def ensure_decode_blocks(self, lookahead: int = 1,
+                             per_slot=None) -> None:
+        """Every active slot is about to write tokens
+        ``ctx_len .. ctx_len + lookahead - 1`` (``per_slot`` overrides
+        the window per slot id, e.g. trimmed to a request's remaining
+        budget); grow its block list to cover them. On pool exhaustion,
+        evict the newest-admitted other slot and retry."""
+        for i in sorted(self.active_slots,
+                        key=lambda j: self.slots[j].admit_seq):
+            slot = self.slots[i]
+            if slot is None:          # preempted earlier in this pass
+                continue
+            la = per_slot.get(i, lookahead) if per_slot else lookahead
+            last = max(la, 1) - 1
+            while (len(slot.blocks) * self.pc.block_size
+                   <= slot.ctx_len + last):
+                fresh = self.alloc.alloc(1)
+                if fresh is not None:
+                    slot.blocks.extend(fresh)
+                    continue
+                victim = self._pick_victim(exclude=i)
+                if victim is None:
+                    raise RuntimeError(
+                        "paged pool exhausted with a single sequence "
+                        "running — pool is too small for the workload")
+                self._preempt(victim)
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        cands = [i for i in self.active_slots if i != exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda i: self.slots[i].admit_seq)
+
+    def _preempt(self, slot_id: int) -> None:
+        slot = self.slots[slot_id]
+        self.alloc.free(slot.blocks)
+        self.slots[slot_id] = None
+        slot.req.n_preempted += 1
+        self.n_preemptions += 1
+        self.queue.appendleft(slot.req)
+
+    # -- retirement ----------------------------------------------------
+    def retire(self, slot_id: int) -> Request:
+        slot = self.slots[slot_id]
+        self.alloc.free(slot.blocks)
+        self.slots[slot_id] = None
+        return slot.req
+
+    # -- planning ------------------------------------------------------
+    def plan(self) -> Plan:
+        """Admission first (keeps the decode batch full); the caller
+        reserves decode blocks via ``ensure_decode_blocks`` once it has
+        chosen its lookahead window."""
+        admitted = self._try_admit()
+        if admitted:
+            return Plan(kind="prefill", prefill=admitted)
+        if self.active_slots:
+            return Plan(kind="decode")
+        return Plan(kind="idle")
+
+    # -- dense views for the jitted steps ------------------------------
+    def block_table(self):
+        """(B, maxb) int32 numpy table, -1 padded."""
+        t = np.full((self.max_concurrency, self.pc.max_blocks_per_seq),
+                    -1, np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot is not None:
+                t[i, :len(slot.blocks)] = slot.blocks
+        return t
+
+    def ctx_lens(self):
+        return np.array(
+            [0 if s is None else s.ctx_len for s in self.slots], np.int32)
+
+    def active_mask(self):
+        return np.array([s is not None for s in self.slots], bool)

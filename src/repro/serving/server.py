@@ -1,0 +1,362 @@
+"""Synchronous serving front-end: ``submit`` / ``step`` / ``drain``.
+
+One :class:`Server` owns the paged pool (device), the scheduler (host)
+and two jit-compiled step functions. Every engine iteration runs either
+one bucket-padded prefill over the newly admitted requests or one decode
+step over all running slots — both at a fixed ``max_concurrency`` batch,
+so the decode step compiles exactly once and prefill once per length
+bucket. Reports TTFT, tokens/s, and queue-depth statistics.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving import paged_cache as pcache
+from repro.serving import runtime
+from repro.serving.sampling import (
+    SamplingParams, batch_base_keys, batch_request_keys, greedy_tokens,
+    pack_params, sample_tokens)
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _bucket(n: int, lo: int, hi: int) -> int:
+    """Smallest power-of-two >= n, clamped to [lo, hi]."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, hi)
+
+
+# jit cache keyed by (cfg, pc, mesh): Server instances with the same
+# model/pool layout share compiled step functions, so a fresh Server
+# (benchmark reruns, worker restarts) never recompiles
+_JIT_CACHE: dict = {}
+
+
+def _jitted_steps(cfg: ModelConfig, pc, mesh):
+    key = (cfg, pc, None if mesh is None else id(mesh))
+    if key not in _JIT_CACHE:
+        def _prefill(params, tokens, lengths, cache, table):
+            return runtime.paged_prefill(params, cfg, pc, tokens,
+                                         lengths, cache, table, mesh)
+
+        def _decode(params, tokens, cache, table, ctx, active):
+            return runtime.paged_decode(params, cfg, pc, tokens, cache,
+                                        table, ctx, active, mesh)
+
+        def _decode_scan(params, tokens, cache, table, ctx, active,
+                         budgets, base_keys, gen_starts, temps, top_ks,
+                         top_ps, n_steps, greedy):
+            return runtime.paged_decode_scan(
+                params, cfg, pc, tokens, cache, table, ctx, active,
+                budgets, base_keys, gen_starts, temps, top_ks, top_ps,
+                n_steps, mesh, greedy=greedy)
+
+        # the cache pytree is donated: pool updates alias in place instead
+        # of copying the full KV pool every step
+        _JIT_CACHE[key] = (
+            jax.jit(_prefill, donate_argnums=(3,)),
+            jax.jit(_decode, donate_argnums=(2,)),
+            jax.jit(_decode_scan, static_argnames=("n_steps", "greedy"),
+                    donate_argnums=(2,)))
+    return _JIT_CACHE[key]
+
+
+class Server:
+    def __init__(self, params, cfg: ModelConfig,
+                 pc: Optional[pcache.PagedConfig] = None,
+                 max_concurrency: int = 8, mesh=None,
+                 calib_tokens=None, max_decode_window: int = 16):
+        runtime.check_supported(cfg)
+        self.params = params
+        self.cfg = cfg
+        self.pc = pc or pcache.PagedConfig()
+        self.mesh = mesh
+        self.scheduler = Scheduler(self.pc, max_concurrency)
+        self.cache = pcache.init_paged_cache(cfg, self.pc)
+        if self.pc.cur_kv:
+            if calib_tokens is None:
+                calib_tokens = jax.random.randint(
+                    jax.random.PRNGKey(0),
+                    (2, min(64, self.pc.max_len)), 0, cfg.vocab_size)
+            self.cache = runtime.calibrate_kv(
+                params, cfg, self.pc, self.cache, calib_tokens)
+
+        self._prefill, self._decode, self._decode_scan = _jitted_steps(
+            cfg, self.pc, mesh)
+        self.max_decode_window = max_decode_window
+
+        self._next_rid = 0
+        self._packed_sig = None       # slot-occupancy signature
+        self._packed = None           # cached (temps, top_ks, top_ps)
+        self._base_keys = None        # cached fold_in(PRNGKey(seed), rid)
+        self.finished: Dict[int, Request] = {}
+        # stats
+        self._t_start: Optional[float] = None
+        self.tokens_generated = 0
+        self.n_prefill_steps = 0
+        self.n_decode_steps = 0
+        self.queue_depth_samples: List[int] = []
+
+    # -- request lifecycle ---------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: Optional[SamplingParams] = None,
+               eos_id: Optional[int] = None,
+               arrival: Optional[float] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(
+            rid=rid, prompt=[int(t) for t in prompt],
+            max_new_tokens=max_new_tokens,
+            sampling=sampling or SamplingParams(), eos_id=eos_id,
+            arrival=time.perf_counter() if arrival is None else arrival)
+        self.scheduler.add(req)
+        return rid
+
+    @property
+    def idle(self) -> bool:
+        return self.scheduler.idle
+
+    # -- engine steps --------------------------------------------------
+    def _slot_keys(self, step_of) -> jnp.ndarray:
+        """(B, 2) uint32 per-slot PRNG keys in one jitted dispatch."""
+        B = self.scheduler.max_concurrency
+        seeds = np.zeros((B,), np.int32)
+        rids = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        for i, slot in enumerate(self.scheduler.slots):
+            if slot is None:
+                continue
+            seeds[i] = slot.req.sampling.seed
+            rids[i] = slot.req.rid
+            steps[i] = step_of(slot)
+        return batch_request_keys(jnp.asarray(seeds), jnp.asarray(rids),
+                                  jnp.asarray(steps))
+
+    def _slot_sampling(self):
+        return [None if s is None else s.req.sampling
+                for s in self.scheduler.slots]
+
+    def _refresh_packed(self):
+        """(Re)build per-slot sampling-parameter and base-key arrays when
+        slot occupancy changes; cached across the many steps between."""
+        sig = tuple(None if s is None else s.req.rid
+                    for s in self.scheduler.slots)
+        if sig == self._packed_sig:
+            return
+        self._packed_sig = sig
+        B = self.scheduler.max_concurrency
+        self._packed = pack_params(self._slot_sampling(), B)
+        seeds = np.zeros((B,), np.int32)
+        rids = np.zeros((B,), np.int32)
+        for i, slot in enumerate(self.scheduler.slots):
+            if slot is not None:
+                seeds[i] = slot.req.sampling.seed
+                rids[i] = slot.req.rid
+        self._base_keys = batch_base_keys(jnp.asarray(seeds),
+                                          jnp.asarray(rids))
+
+    def _sample_batch(self, logits, step_of):
+        """Sample every slot row; greedy fast path when no live request
+        needs temperature sampling. Returns numpy (tokens, logprobs)."""
+        samplings = self._slot_sampling()
+        if all(sp is None or sp.temperature <= 0.0 for sp in samplings):
+            toks, lps = greedy_tokens(logits)
+        else:
+            self._refresh_packed()
+            keys = self._slot_keys(step_of)
+            toks, lps = sample_tokens(logits, *self._packed, keys)
+        toks, lps = jax.device_get((toks, lps))
+        return np.asarray(toks), np.asarray(lps)
+
+    def _maybe_retire(self, slot_id: int, now: float) -> None:
+        slot = self.scheduler.slots[slot_id]
+        req = slot.req
+        if (req.eos_id is not None and req.out_tokens
+                and req.out_tokens[-1] == req.eos_id):
+            req.finish_reason = "eos"
+        elif len(req.out_tokens) >= req.max_new_tokens:
+            req.finish_reason = "length"
+        else:
+            return
+        req.finish_time = now
+        self.scheduler.retire(slot_id)
+        self.finished[req.rid] = req
+
+    def _run_prefill(self, admitted, now: float) -> None:
+        sched = self.scheduler
+        B = sched.max_concurrency
+        lengths = np.zeros((B,), np.int32)
+        rows: Dict[int, List[int]] = {}
+        for slot_id, req in admitted:
+            toks = req.prompt + req.out_tokens[:-1] \
+                if req.out_tokens else list(req.prompt)
+            rows[slot_id] = toks
+            lengths[slot_id] = len(toks)
+        S = _bucket(int(lengths.max()), self.pc.block_size, self.pc.max_len)
+        tokens = np.zeros((B, S), np.int32)
+        for slot_id, toks in rows.items():
+            tokens[slot_id, :len(toks)] = toks
+        table = sched.block_table()
+        logits, self.cache = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            self.cache, jnp.asarray(table))
+        toks, lps = self._sample_batch(
+            logits, lambda s: len(s.req.out_tokens))
+        t_now = time.perf_counter()
+        for slot_id, req in admitted:
+            if req.out_tokens:
+                # preemption restore: generated tokens already known; the
+                # re-prefill only rebuilt the cache — nothing to sample
+                sched.slots[slot_id].next_token = req.out_tokens[-1]
+                continue
+            req.ttft = t_now - req.arrival
+            req.out_tokens.append(int(toks[slot_id]))
+            req.out_logprobs.append(float(lps[slot_id]))
+            sched.slots[slot_id].next_token = req.out_tokens[-1]
+            self.tokens_generated += 1
+            self._maybe_retire(slot_id, t_now)
+        self.n_prefill_steps += 1
+
+    def _decode_window(self) -> int:
+        """Largest useful multi-step window: a power of two bounded by
+        the *largest* remaining generation budget (rows that fill their
+        budget mid-window freeze in-scan) and ``max_decode_window``.
+        Stop tokens force single-stepping — eos retirement must be
+        checked per token."""
+        sched = self.scheduler
+        reqs = [sched.slots[i].req for i in sched.active_slots]
+        if any(r.eos_id is not None for r in reqs):
+            return 1
+        rem = max(r.max_new_tokens - len(r.out_tokens) for r in reqs)
+        k = 1
+        while k * 2 <= min(rem, self.max_decode_window):
+            k *= 2
+        return k
+
+    def _run_single_decode(self) -> None:
+        sched = self.scheduler
+        B = sched.max_concurrency
+        next_toks = np.zeros((B, 1), np.int32)
+        for i, slot in enumerate(sched.slots):
+            if slot is not None:
+                next_toks[i, 0] = slot.next_token
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(next_toks), self.cache,
+            jnp.asarray(sched.block_table()),
+            jnp.asarray(sched.ctx_lens()),
+            jnp.asarray(sched.active_mask()))
+        toks, lps = self._sample_batch(
+            logits, lambda s: len(s.req.out_tokens))
+        t_now = time.perf_counter()
+        for i in list(sched.active_slots):
+            slot = sched.slots[i]
+            slot.ctx_len += 1            # the input token is now cached
+            slot.req.out_tokens.append(int(toks[i]))
+            slot.req.out_logprobs.append(float(lps[i]))
+            slot.next_token = slot.req.out_tokens[-1]
+            self.tokens_generated += 1
+            self._maybe_retire(i, t_now)
+        self.n_decode_steps += 1
+
+    def _run_decode(self, now: float) -> None:
+        sched = self.scheduler
+        k = self._decode_window()
+        remaining = {i: sched.slots[i].req.max_new_tokens
+                     - len(sched.slots[i].req.out_tokens)
+                     for i in sched.active_slots}
+        # reserve blocks for each row's real write count inside the window
+        sched.ensure_decode_blocks(
+            per_slot={i: min(k, r) for i, r in remaining.items()})
+        if k == 1:
+            self._run_single_decode()
+            return
+        B = sched.max_concurrency
+        next_toks = np.zeros((B, 1), np.int32)
+        gen_starts = np.zeros((B,), np.int32)
+        budgets = np.zeros((B,), np.int32)
+        for i, slot in enumerate(sched.slots):
+            if slot is not None:
+                next_toks[i, 0] = slot.next_token
+                gen_starts[i] = len(slot.req.out_tokens)
+                budgets[i] = slot.req.max_new_tokens
+        table = sched.block_table()
+        ctx = sched.ctx_lens()
+        active = sched.active_mask()
+        self._refresh_packed()
+        greedy = all(sp is None or sp.temperature <= 0.0
+                     for sp in self._slot_sampling())
+        toks_seq, lps_seq, self.cache = self._decode_scan(
+            self.params, jnp.asarray(next_toks), self.cache,
+            jnp.asarray(table), jnp.asarray(ctx), jnp.asarray(active),
+            jnp.asarray(budgets), self._base_keys,
+            jnp.asarray(gen_starts), *self._packed, n_steps=k,
+            greedy=greedy)
+        toks_seq, lps_seq = jax.device_get((toks_seq, lps_seq))
+        t_now = time.perf_counter()
+        actives = list(sched.active_slots)
+        for i in actives:
+            slot = sched.slots[i]
+            take = min(k, remaining[i])
+            for t in range(take):
+                slot.ctx_len += 1        # the input token is now cached
+                slot.req.out_tokens.append(int(toks_seq[t, i]))
+                slot.req.out_logprobs.append(float(lps_seq[t, i]))
+                self.tokens_generated += 1
+            slot.next_token = slot.req.out_tokens[-1]
+            self._maybe_retire(i, t_now)
+        self.n_decode_steps += k
+
+    def step(self) -> bool:
+        """One engine iteration. Returns False when nothing was runnable."""
+        now = time.perf_counter()
+        if self._t_start is None:
+            self._t_start = now
+        self.queue_depth_samples.append(self.scheduler.queue_depth)
+        plan = self.scheduler.plan()
+        if plan.kind == "prefill":
+            self._run_prefill(plan.prefill, now)
+        elif plan.kind == "decode":
+            self._run_decode(now)
+        else:
+            return False
+        return True
+
+    def drain(self) -> Dict[int, Request]:
+        """Run until queue and slots are empty; returns finished requests."""
+        while not self.idle:
+            if not self.step():
+                break
+        return self.finished
+
+    # -- reporting -----------------------------------------------------
+    def cache_bytes(self) -> int:
+        return pcache.cache_bytes(self.cache)
+
+    def stats(self) -> dict:
+        elapsed = (time.perf_counter() - self._t_start
+                   if self._t_start is not None else 0.0)
+        ttfts = [r.ttft for r in self.finished.values()
+                 if r.ttft is not None]
+        qd = self.queue_depth_samples
+        return {
+            "completed": len(self.finished),
+            "tokens_generated": self.tokens_generated,
+            "elapsed_s": elapsed,
+            "tokens_per_s": (self.tokens_generated / elapsed
+                             if elapsed > 0 else 0.0),
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_max_s": float(np.max(ttfts)) if ttfts else 0.0,
+            "queue_depth_mean": float(np.mean(qd)) if qd else 0.0,
+            "queue_depth_max": int(np.max(qd)) if qd else 0,
+            "n_prefill_steps": self.n_prefill_steps,
+            "n_decode_steps": self.n_decode_steps,
+            "n_preemptions": self.scheduler.n_preemptions,
+            "cache_bytes": self.cache_bytes(),
+        }

@@ -182,3 +182,34 @@ def test_structural_cur_reduces_params():
     assert set(blk["wq"].keys()) == {"C", "U0", "dU", "R"}
     # Eq. 2 rank: wq is (8192, 8192) -> r_max cap
     assert blk["wq"]["U0"].shape == (95, 256, 256)
+
+
+def test_paged_cache_specs_divisible():
+    """Paged-pool specs: kv-heads shard over 'model', tables replicate,
+    CUR-KV projections replicate; all assignments divisible."""
+    mesh = _mesh()
+    cfg = get_config("olmo-1b")
+    cache, pc = sp.paged_cache_specs(cfg, SHAPES["decode_32k"])
+    specs = shd.paged_cache_pspecs(cache, cfg, mesh)
+    _check_divisible(cache, specs, mesh, "paged-olmo")
+    assert tuple(specs["k"]) == (None, None, None, "model", None)
+    toks, table, ctx, active = shd.paged_decode_pspecs(
+        cfg, SHAPES["decode_32k"].global_batch, pc.max_blocks_per_seq,
+        mesh)
+    assert tuple(toks) == ("data", None)
+    assert tuple(table) == ("data", None)
+
+
+def test_paged_cache_specs_cur_kv():
+    from repro.serving.paged_cache import PagedConfig, init_paged_cache
+    mesh = _mesh()
+    cfg = get_config("olmo-1b")
+    pc = PagedConfig(block_size=128, n_blocks=64, max_blocks_per_seq=8,
+                     cur_kv=True, kv_rank=64)
+    cache = jax.eval_shape(lambda: init_paged_cache(cfg, pc))
+    specs = shd.paged_cache_pspecs(cache, cfg, mesh)
+    _check_divisible(cache, specs, mesh, "paged-curkv")
+    assert tuple(specs["k"]) == (None, None, None, "model", None)
+    assert specs["proj"]["uk"] is None          # replicated
+    # CUR-KV pool stores r of head_dim feature columns
+    assert cache["k"].shape[-1] == 64
