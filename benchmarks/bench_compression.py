@@ -1,12 +1,19 @@
 """Paper Table 1: compression time + size reduction vs number of
-compressed layers (linear scaling), plus the beyond-paper randomized-SVD
-speedup on paper-scale weight shapes."""
+compressed layers (linear scaling), the beyond-paper randomized-SVD
+speedup on paper-scale weight shapes, and the loop-vs-batched pipeline
+comparison (median-of-3) on the 8-layer CPU repro config.
+
+    PYTHONPATH=src python -m benchmarks.bench_compression [--out f.json]
+"""
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import time_call
 from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
 from repro.core.compress import compress_weight
@@ -14,7 +21,36 @@ from repro.data.tokens import SyntheticLM
 from repro.zoo import data_config, get_trained_repro
 
 
-def run(quick=True):
+def _pipeline_comparison(params, cfg, calib, quick):
+    """Loop (paper-faithful reference: per-weight, exact SVD) vs the
+    batched shape-class pipeline as shipped by launch/cure.py
+    (jitted + vmapped, randomized SVD). Median-of-3 end-to-end
+    compress_model wall-clock on the 8-layer repro config."""
+    n_layers = 4 if quick else 6
+    configs = {
+        "loop_exact": CURConfig(r_max=64, n_compress_layers=n_layers,
+                                pipeline="loop", svd="exact"),
+        "batched_exact": CURConfig(r_max=64, n_compress_layers=n_layers,
+                                   pipeline="batched", svd="exact"),
+        "batched_randomized": CURConfig(
+            r_max=64, n_compress_layers=n_layers,
+            pipeline="batched", svd="randomized"),
+    }
+    rows, medians = [], {}
+    for name, ccfg in configs.items():
+        dt = time_call(
+            lambda c=ccfg: compress_model(params, cfg, c, calib)[2])
+        medians[name] = dt
+        rows.append((f"pipeline/{name}_{n_layers}L", dt * 1e6, ""))
+    speedup = medians["loop_exact"] / medians["batched_randomized"]
+    rows.append((
+        "pipeline/speedup_loop_vs_batched",
+        medians["batched_randomized"] * 1e6,
+        f"speedup={speedup:.2f}x"))
+    return rows, medians, speedup
+
+
+def run(quick=True, out=None):
     rows = []
     params, cfg = get_trained_repro(quick=quick)
     ds = SyntheticLM(data_config(cfg, seed=1))
@@ -43,9 +79,35 @@ def run(quick=True):
         dt = time.perf_counter() - t0
         rows.append((f"table1/svd_{svd}_{m}x{n_}", dt * 1e6,
                      f"relerr={info.fro_err/info.fro_w:.4f}"))
+
+    prows, medians, speedup = _pipeline_comparison(params, cfg, calib, quick)
+    rows.extend(prows)
+
+    if out is not None:
+        with open(out, "w") as f:
+            json.dump({
+                "config": cfg.name,
+                "n_layers": cfg.n_layers,
+                "pipeline_median_s": {k: round(v, 4)
+                                      for k, v in medians.items()},
+                "speedup_loop_exact_vs_batched_randomized":
+                    round(speedup, 2),
+                "rows": [{"name": r[0], "us": round(r[1], 1),
+                          "derived": r[2]} for r in rows],
+            }, f, indent=1)
     return rows
 
 
-if __name__ == "__main__":
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep sizes (slower)")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
     from benchmarks.common import emit
-    emit(run(quick=False))
+    print("name,us_per_call,derived")
+    emit(run(quick=not args.full, out=args.out))
+
+
+if __name__ == "__main__":
+    main()

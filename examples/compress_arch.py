@@ -33,6 +33,8 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x22b", choices=ARCHS)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--r-max", type=int, default=16)
+    ap.add_argument("--pipeline", default="batched",
+                    choices=("batched", "loop"))
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
@@ -42,7 +44,10 @@ def main():
     calib = calibrate(params, cfg, [batch])
     sp, scfg, info = compress_model(
         params, cfg,
-        CURConfig(r_max=args.r_max, n_compress_layers=args.layers), calib)
+        CURConfig(r_max=args.r_max, n_compress_layers=args.layers,
+                  pipeline=args.pipeline), calib)
+    print(f"compressed in {info.seconds_total:.2f}s "
+          f"({args.pipeline} pipeline)")
     print(f"angular distances: {[round(float(d),3) for d in info.distances]}")
     print(f"compressed layers {info.layers}: "
           f"{[(w.layer, w.name, w.rank) for w in info.weights]}")

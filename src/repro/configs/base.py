@@ -223,6 +223,9 @@ class CURConfig:
     svd: str = "exact"              # "exact" (paper) | "randomized" (ours)
     fold_u: bool = False            # fold C@U -> C' for inference
     seed: int = 0
+    # "batched": jitted + vmapped per shape-class (fast path);
+    # "loop": per-weight reference — identical selections on fixed seeds
+    pipeline: str = "batched"
 
 
 # ---------------------------------------------------------------------------

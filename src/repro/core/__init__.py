@@ -5,6 +5,7 @@ from repro.core.angular import angular_distance, layer_distances, select_layers
 from repro.core.calibrate import CalibStats, calibrate
 from repro.core.compress import (
     CompressInfo,
+    WeightInfo,
     compress_model,
     compress_weight,
     fold_cur,

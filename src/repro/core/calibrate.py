@@ -6,8 +6,13 @@ collecting, per block,
   - the accumulated squared input activations of every CURing target weight
     (for WANDA importance).
 
-Runs block-by-block in Python (compression happens at CPU scale; the
-instrumentation mirrors ``model.block_forward`` exactly).
+The instrumented forward for one micro-batch is a single jitted function
+(cached per config, like the serving step cache), and both accumulators
+stay device-resident across batches — hidden-state chunks concatenate on
+device and ``act_sq`` accumulates with jnp adds. The ONLY host transfer
+is the one ``jax.device_get`` at the end; the seed implementation
+``np.asarray``'d every block of every batch, which serialized the whole
+pass on host syncs.
 """
 from __future__ import annotations
 
@@ -52,50 +57,81 @@ _MIXER_TARGETS = {"wq", "wk", "wv", "w_z", "w_x", "w_B", "w_C", "w_dt"}
 _MLP_TARGETS = {"w_gate", "w_up"}
 
 
-def _accum(store, name, h):
-    """Accumulate sum of squares over all tokens. h: (B, S, m)."""
-    sq = jnp.sum(h.astype(jnp.float32) ** 2, axis=(0, 1))
-    store[name] = store.get(name, 0.0) + np.asarray(sq)
+def _sq_sum(h: jnp.ndarray) -> jnp.ndarray:
+    """Sum of squares over all tokens. h: (B, S, m) -> (m,)."""
+    return jnp.sum(h.astype(jnp.float32) ** 2, axis=(0, 1))
+
+
+def _calib_step(params, cfg, batch, mesh=None):
+    """Instrumented forward for one micro-batch (mirrors
+    ``model.block_forward``). Returns (hs (L+1, B, D) last-token states,
+    per-layer act_sq dicts) — all device arrays."""
+    x = _embed(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    hs = [x[:, -1, :]]
+    act_sq: List[Dict[str, jnp.ndarray]] = []
+    for li, spec, p in iter_layer_params(params, cfg):
+        acc: Dict[str, jnp.ndarray] = {}
+        h1 = norm(x, p.get("norm1"), cfg)
+        for t in cfg.cur_targets:
+            if t in _MIXER_TARGETS and t in p:
+                acc[t] = _sq_sum(h1)
+        if spec.mixer in (ATTN, ATTN_LOCAL):
+            win = cfg.window if spec.mixer == ATTN_LOCAL else 0
+            a = attn.attn_forward(h1, p, cfg, positions, window=win)
+        elif spec.mixer == MAMBA:
+            a = mb.mamba_forward(h1, p, cfg)
+        else:
+            raise ValueError(spec.mixer)
+        x = x + a
+        if spec.mlp in (MLP, MOE):
+            h2 = norm(x, p.get("norm2"), cfg)
+            for t in cfg.cur_targets:
+                if t in _MLP_TARGETS and t in p:
+                    acc[t] = _sq_sum(h2)
+            if spec.mlp == MLP:
+                x = x + mlp_forward(h2, p, cfg)
+            else:
+                x = x + moe_forward(h2, p, cfg, mesh)
+        hs.append(x[:, -1, :])
+        act_sq.append(acc)
+    return jnp.stack(hs), act_sq
+
+
+# jit cache keyed by cfg (+ mesh identity): one compile per model shape,
+# shared across calibrate() calls and batches
+_STEP_CACHE: dict = {}
+
+
+def _jitted_step(cfg, mesh):
+    key = (cfg, None if mesh is None else id(mesh))
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = jax.jit(
+            lambda params, batch: _calib_step(params, cfg, batch, mesh))
+    return _STEP_CACHE[key]
 
 
 def calibrate(params, cfg, batches, mesh=None) -> CalibStats:
     """batches: list of batch dicts (each one calibration micro-batch)."""
-    hidden_acc = None
-    act_sq = [dict() for _ in range(cfg.n_layers)]
+    step = _jitted_step(cfg, mesh)
+    hidden_chunks = []
+    act_acc: List[Dict[str, jnp.ndarray]] = [
+        dict() for _ in range(cfg.n_layers)]
     n_tokens = 0
 
     for batch in batches:
-        x = _embed(params, cfg, batch)
-        B, S, D = x.shape
-        n_tokens += B * S
-        positions = jnp.broadcast_to(
-            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-        hs = [np.asarray(x[:, -1, :])]
-        for li, spec, p in iter_layer_params(params, cfg):
-            h1 = norm(x, p.get("norm1"), cfg)
-            for t in cfg.cur_targets:
-                if t in _MIXER_TARGETS and t in p:
-                    _accum(act_sq[li], t, h1)
-            if spec.mixer in (ATTN, ATTN_LOCAL):
-                win = cfg.window if spec.mixer == ATTN_LOCAL else 0
-                a = attn.attn_forward(h1, p, cfg, positions, window=win)
-            elif spec.mixer == MAMBA:
-                a = mb.mamba_forward(h1, p, cfg)
-            else:
-                raise ValueError(spec.mixer)
-            x = x + a
-            if spec.mlp in (MLP, MOE):
-                h2 = norm(x, p.get("norm2"), cfg)
-                for t in cfg.cur_targets:
-                    if t in _MLP_TARGETS and t in p:
-                        _accum(act_sq[li], t, h2)
-                if spec.mlp == MLP:
-                    x = x + mlp_forward(h2, p, cfg)
-                else:
-                    x = x + moe_forward(h2, p, cfg, mesh)
-            hs.append(np.asarray(x[:, -1, :]))
-        hs = np.stack(hs)                           # (L+1, B, D)
-        hidden_acc = hs if hidden_acc is None else np.concatenate(
-            [hidden_acc, hs], axis=1)
+        shape = (batch["tokens"] if cfg.input_mode == "tokens"
+                 else batch["embeds"]).shape
+        n_tokens += shape[0] * shape[1]
+        hs, act_sq = step(params, batch)
+        hidden_chunks.append(hs)                    # (L+1, B, D) on device
+        for li, acc in enumerate(act_sq):
+            for t, sq in acc.items():
+                prev = act_acc[li].get(t)
+                act_acc[li][t] = sq if prev is None else prev + sq
 
-    return CalibStats(hidden=hidden_acc, act_sq=act_sq, n_tokens=n_tokens)
+    hidden, act_np = jax.device_get(
+        (jnp.concatenate(hidden_chunks, axis=1), act_acc))
+    return CalibStats(hidden=hidden, act_sq=act_np, n_tokens=n_tokens)

@@ -9,12 +9,28 @@
   3. rebuild the model with per-layer (unrolled) groups so compressed and
      dense layers coexist.
 
+Two execution pipelines (``CURConfig.pipeline``):
+
+``"batched"`` (default) groups the selected weights by shape-class —
+the 12 arch configs repeat the same (m, n) per target across layers —
+and runs selection + decomposition for each class as ONE jitted, vmapped
+call: batched WANDA scores -> batched SVD -> vmapped DEIM -> batched
+pinv link solve. One host transfer per class instead of several per
+weight; this is what makes one-shot CURing wall-clock competitive
+(paper Table 1: Llama3.1-8B in 129 s).
+
+``"loop"`` is the original per-weight reference path. Both consume the
+same per-weight PRNG key stream (split in network order before
+dispatch), so on a fixed seed they produce identical row/col selections
+and link matrices — ``tests/test_compress.py`` enforces this.
+
 Selection-strategy ablations (paper App. D.2) are first-class:
 ``wanda_deim`` (CURing) | ``wanda`` | ``deim`` | ``weight`` | ``random``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -46,10 +62,17 @@ class WeightInfo:
     cols: np.ndarray
     fro_err: float          # ||W - CUR||_F
     fro_w: float            # ||W||_F
-    bound: float            # Theorem 3.1 spectral bound (wanda matrix)
+    bound: float            # Theorem 3.1 spectral bound (see bound_on)
     seconds: float
     params_before: int
-    params_after: int
+    params_after: int       # the DEPLOYED form: folded iff cur_cfg.fold_u
+    params_after_unfolded: int = 0  # m r + r^2 + r n   ({C, U0, dU, R})
+    params_after_folded: int = 0    # m r + r n         ({CU, R})
+    # which matrix the Theorem 3.1 bound is valid for: the WANDA
+    # importance matrix S ("wanda"), the raw weight W ("weight"), or not
+    # computed ("none"). wanda_deim selects indices on S's singular
+    # vectors, so its bound holds for S — NOT for W.
+    bound_on: str = "none"
 
 
 @dataclasses.dataclass
@@ -58,10 +81,22 @@ class CompressInfo:
     layers: List[int]
     weights: List[WeightInfo]
     seconds_total: float
+    seconds_fold: float = 0.0   # portion spent folding C@U (fold_u only)
 
     @property
     def params_saved(self) -> int:
+        """Savings of the deployed form (folded iff cur_cfg.fold_u)."""
         return sum(w.params_before - w.params_after for w in self.weights)
+
+    @property
+    def params_saved_unfolded(self) -> int:
+        return sum(w.params_before - w.params_after_unfolded
+                   for w in self.weights)
+
+    @property
+    def params_saved_folded(self) -> int:
+        return sum(w.params_before - w.params_after_folded
+                   for w in self.weights)
 
 
 def _top_k_indices(scores: jnp.ndarray, r: int) -> jnp.ndarray:
@@ -70,8 +105,7 @@ def _top_k_indices(scores: jnp.ndarray, r: int) -> jnp.ndarray:
 
 
 def select_indices(W: jnp.ndarray, r: int, method: str,
-                   act_sq: Optional[np.ndarray], key,
-                   svd_method: str = "exact"):
+                   act_sq, key, svd_method: str = "exact"):
     """Pick r row indices p and r column indices q of W."""
     svd_fn = (exact_svd if svd_method == "exact"
               else lambda M, rr: randomized_svd(M, rr, key))
@@ -102,9 +136,21 @@ def select_indices(W: jnp.ndarray, r: int, method: str,
     return p, q, aux
 
 
+def _bound_on(selection: str) -> str:
+    return {"wanda_deim": "wanda", "deim": "weight"}.get(selection, "none")
+
+
+def _param_counts(m: int, n: int, r: int, fold_u: bool):
+    """(before, after_unfolded, after_folded, after_deployed)."""
+    unfolded = m * r + r * r + r * n
+    folded = m * r + r * n
+    return m * n, unfolded, folded, (folded if fold_u else unfolded)
+
+
 def compress_weight(W: jnp.ndarray, name: str, layer: int,
                     cur_cfg: CURConfig, act_sq: Optional[np.ndarray],
                     key) -> Tuple[dict, WeightInfo]:
+    """Single-weight reference path (also the ``pipeline="loop"`` body)."""
     t0 = time.perf_counter()
     m, n = W.shape
     r = rank_for(m, n, cur_cfg.r_max)
@@ -115,7 +161,7 @@ def compress_weight(W: jnp.ndarray, name: str, layer: int,
     bound = float("nan")
     if "P" in aux and aux["sig"].shape[0] > r:
         bound = float(spectral_error_bound(
-            W, aux["P"][:, :r], aux["Q"][:, :r], aux["sig"], p, q))
+            aux["P"][:, :r], aux["Q"][:, :r], aux["sig"], p, q))
     dt = time.perf_counter() - t0
     leaf = {
         "C": C.astype(W.dtype),
@@ -123,13 +169,116 @@ def compress_weight(W: jnp.ndarray, name: str, layer: int,
         "dU": jnp.zeros_like(U, jnp.float32),
         "R": R.astype(W.dtype),
     }
+    before, unfolded, folded, deployed = _param_counts(
+        m, n, r, cur_cfg.fold_u)
     info = WeightInfo(
         layer=layer, name=name, shape=(m, n), rank=r,
         rows=np.asarray(p), cols=np.asarray(q),
         fro_err=approx_err, fro_w=float(jnp.linalg.norm(W)),
         bound=bound, seconds=dt,
-        params_before=m * n, params_after=m * r + r * r + r * n)
+        params_before=before, params_after=deployed,
+        params_after_unfolded=unfolded, params_after_folded=folded,
+        bound_on=_bound_on(cur_cfg.selection))
     return leaf, info
+
+
+# ---------------------------------------------------------------------------
+# batched pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _WorkItem:
+    layer: int
+    name: str
+    W: jnp.ndarray
+    act: Optional[np.ndarray]
+    key: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("r", "selection", "svd"))
+def _compress_class_batched(Ws, acts, keys, *, r: int, selection: str,
+                            svd: str):
+    """One shape-class: Ws (k, m, n), acts (k, m), keys (k,) PRNG keys.
+    vmaps the whole per-weight chain — selection SVD, DEIM, pinv link
+    solve, reconstruction error, Theorem 3.1 bound — into one XLA call."""
+
+    def one(W, act, key):
+        p, q, aux = select_indices(W, r, selection, act, key, svd)
+        Wf = W.astype(jnp.float32)
+        C, U, R = cur_from_indices(Wf, p, q)
+        err = jnp.linalg.norm(Wf - C @ U @ R)
+        if "P" in aux and aux["sig"].shape[0] > r:
+            bound = spectral_error_bound(
+                aux["P"][:, :r], aux["Q"][:, :r], aux["sig"], p, q)
+        else:
+            bound = jnp.float32(jnp.nan)
+        return {"p": p, "q": q, "C": C, "U": U, "R": R, "err": err,
+                "frow": jnp.linalg.norm(W), "bound": bound}
+
+    return jax.vmap(one)(Ws, acts, keys)
+
+
+# shape-class signatures whose jit compile already happened — the first
+# call per signature re-runs once so WeightInfo.seconds reports warm
+# execution, not the one-time XLA compile (which stages_s.compress /
+# CompressInfo.seconds_total still include)
+_WARM_CLASSES: set = set()
+
+
+def _compress_batched(work: List[_WorkItem], cur_cfg: CURConfig):
+    """Run the work list grouped by (m, n) shape-class; returns
+    (leaf, WeightInfo) per item, in work-list order."""
+    classes: Dict[Tuple[int, int], List[int]] = {}
+    for i, it in enumerate(work):
+        classes.setdefault(tuple(it.W.shape), []).append(i)
+
+    results: List[Optional[Tuple[dict, WeightInfo]]] = [None] * len(work)
+    for (m, n), idxs in classes.items():
+        t0 = time.perf_counter()
+        r = rank_for(m, n, cur_cfg.r_max)
+        Ws = jnp.stack([work[i].W for i in idxs])
+        acts = jnp.stack([
+            jnp.asarray(work[i].act, jnp.float32) if work[i].act is not None
+            else jnp.zeros((m,), jnp.float32) for i in idxs])
+        keys = jnp.stack([work[i].key for i in idxs])
+
+        def call():
+            return _compress_class_batched(
+                Ws, acts, keys, r=r, selection=cur_cfg.selection,
+                svd=cur_cfg.svd)
+
+        sig = (len(idxs), m, n, str(Ws.dtype), r, cur_cfg.selection,
+               cur_cfg.svd)
+        if sig not in _WARM_CLASSES:
+            jax.block_until_ready(call())        # compile + first run
+            _WARM_CLASSES.add(sig)
+            t0 = time.perf_counter()             # time the warm run only
+        out = call()
+        # ONE host transfer per class for the scalar/index fields; the
+        # big factors stay device-resident in the returned leaves
+        ps, qs, errs, frows, bounds = jax.device_get(
+            (out["p"], out["q"], out["err"], out["frow"], out["bound"]))
+        dt = (time.perf_counter() - t0) / len(idxs)
+        before, unfolded, folded, deployed = _param_counts(
+            m, n, r, cur_cfg.fold_u)
+        for k, i in enumerate(idxs):
+            it = work[i]
+            leaf = {
+                "C": out["C"][k].astype(it.W.dtype),
+                "U0": out["U"][k],
+                "dU": jnp.zeros_like(out["U"][k]),
+                "R": out["R"][k].astype(it.W.dtype),
+            }
+            info = WeightInfo(
+                layer=it.layer, name=it.name, shape=(m, n), rank=r,
+                rows=ps[k], cols=qs[k],
+                fro_err=float(errs[k]), fro_w=float(frows[k]),
+                bound=float(bounds[k]), seconds=dt,
+                params_before=before, params_after=deployed,
+                params_after_unfolded=unfolded, params_after_folded=folded,
+                bound_on=_bound_on(cur_cfg.selection))
+            results[i] = (leaf, info)
+    return results
 
 
 def fold_cur(leaf: dict) -> dict:
@@ -154,6 +303,31 @@ def unroll_params(params, cfg: ModelConfig):
     return new
 
 
+def _cur_work_list(params, cfg: ModelConfig, cur_cfg: CURConfig,
+                   calib: CalibStats, layer_set) -> List[_WorkItem]:
+    """Enumerate compressible weights in network order, assigning each
+    its PRNG key by splitting in that same order — the key stream is
+    therefore identical for the loop and batched pipelines."""
+    key = jax.random.PRNGKey(cur_cfg.seed)
+    work: List[_WorkItem] = []
+    for li, spec, lp in iter_layer_params(params, cfg):
+        if li not in layer_set:
+            continue
+        for t in cfg.cur_targets:
+            if t not in lp:
+                continue
+            W = lp[t]
+            if W.ndim != 2:                      # (e.g. MoE expert stacks)
+                continue
+            key, sub = jax.random.split(key)
+            act = calib.act_sq[li].get(t) if calib.act_sq else None
+            if act is None and cur_cfg.selection in ("wanda_deim", "wanda"):
+                raise ValueError(
+                    f"no calibration activations for layer {li} weight {t}")
+            work.append(_WorkItem(li, t, W, act, sub))
+    return work
+
+
 def compress_model(params, cfg: ModelConfig, cur_cfg: CURConfig,
                    calib: CalibStats, layers: Optional[List[int]] = None):
     """Returns (new_params, new_cfg, CompressInfo)."""
@@ -167,33 +341,32 @@ def compress_model(params, cfg: ModelConfig, cur_cfg: CURConfig,
 
     new_cfg = unrolled_config(cfg)
     new_params = unroll_params(params, cfg)
-    infos: List[WeightInfo] = []
-    key = jax.random.PRNGKey(cur_cfg.seed)
 
-    for li, spec, lp in iter_layer_params(params, cfg):
-        if li not in layer_set:
-            continue
-        block = new_params["groups"][li][0]
-        for t in cfg.cur_targets:
-            if t not in block:
-                continue
-            W = block[t][0]                      # strip leading rep dim
-            if W.ndim != 2:                      # (e.g. MoE expert stacks)
-                continue
-            key, sub = jax.random.split(key)
-            act = calib.act_sq[li].get(t) if calib.act_sq else None
-            if act is None and cur_cfg.selection in ("wanda_deim", "wanda"):
-                raise ValueError(
-                    f"no calibration activations for layer {li} weight {t}")
-            leaf, info = compress_weight(W, t, li, cur_cfg, act, sub)
-            if info.params_after >= info.params_before:
-                continue                         # Eq. 2 guard
-            if cur_cfg.fold_u:
-                leaf = fold_cur(leaf)
-            block[t] = jax.tree.map(lambda a: a[None], leaf)
-            infos.append(info)
+    work = _cur_work_list(params, cfg, cur_cfg, calib, layer_set)
+    if cur_cfg.pipeline == "loop":
+        results = [compress_weight(it.W, it.name, it.layer, cur_cfg,
+                                   it.act, it.key) for it in work]
+    elif cur_cfg.pipeline == "batched":
+        results = _compress_batched(work, cur_cfg)
+    else:
+        raise ValueError(cur_cfg.pipeline)
+
+    infos: List[WeightInfo] = []
+    seconds_fold = 0.0
+    for it, (leaf, info) in zip(work, results):
+        if info.params_after >= info.params_before:
+            continue                             # Eq. 2 guard, deployed form
+        if cur_cfg.fold_u:
+            t_fold = time.perf_counter()
+            leaf = fold_cur(leaf)
+            jax.block_until_ready(leaf["CU"])
+            seconds_fold += time.perf_counter() - t_fold
+        block = new_params["groups"][it.layer][0]
+        block[it.name] = jax.tree.map(lambda a: a[None], leaf)
+        infos.append(info)
 
     cinfo = CompressInfo(
         distances=distances, layers=sorted(layer_set), weights=infos,
-        seconds_total=time.perf_counter() - t_start)
+        seconds_total=time.perf_counter() - t_start,
+        seconds_fold=seconds_fold)
     return new_params, new_cfg, cinfo

@@ -71,9 +71,14 @@ def cur_error_constants(P: jnp.ndarray, Q: jnp.ndarray,
     return inv_norm(P[p, :]), inv_norm(Q[q, :])
 
 
-def spectral_error_bound(W, P, Q, sig, p, q):
-    """(eta_p + eta_q) * sigma_{r+1} — the Theorem 3.1 upper bound.
-    ``sig`` must contain at least r+1 singular values of W."""
+def spectral_error_bound(P, Q, sig, p, q):
+    """(eta_p + eta_q) * sigma_{r+1} — the Theorem 3.1 upper bound on
+    ||M - C U R||_2 for the matrix M whose leading singular vectors are
+    (P, Q) and whose singular values are ``sig`` (at least r+1 of them).
+
+    NB the bound is only valid for the matrix that was decomposed: under
+    ``wanda_deim`` selection that is the WANDA importance matrix S, *not*
+    the raw weight W (``WeightInfo.bound_on`` records which)."""
     eta_p, eta_q = cur_error_constants(P, Q, p, q)
     r = p.shape[0]
     return (eta_p + eta_q) * sig[r] if sig.shape[0] > r else jnp.inf

@@ -25,7 +25,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, scale, bq, bk, nk, causal, window):
+            *, scale, bq, bk, nk, causal, window, kv_len):
     i = pl.program_id(2)          # q tile
     j = pl.program_id(3)          # kv tile
 
@@ -60,6 +60,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             mask &= kj <= qi
         if window > 0:
             mask &= kj > qi - window
+        if kv_len < nk * bk:       # ragged S: padded keys are dead
+            mask &= kj < kv_len
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -79,26 +81,44 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     bq: int = 128, bk: int = 128, interpret: bool = False):
-    """q (B,H,S,d); k,v (B,K,S,d), H = K*G -> (B,H,S,d)."""
+    """q (B,H,S,d); k,v (B,K,S,d), H = K*G -> (B,H,S,d).
+
+    Ragged S (not a multiple of the block sizes) pads q/k/v up to the
+    block grid and slices the output back — the same pad-and-slice path
+    ``cur_matmul`` uses. Padded keys are masked inside the kernel (the
+    causal mask alone does not kill them when ``causal=False``); padded
+    query rows produce garbage that the final slice discards."""
     B, H, S, d = q.shape
     K = k.shape[1]
+    if H % K != 0:
+        raise ValueError(
+            f"GQA requires n_heads % n_kv_heads == 0; got H={H}, K={K}")
     G = H // K
     bq = min(bq, S)
     bk = min(bk, S)
-    assert S % bq == 0 and S % bk == 0
-    nq, nk = S // bq, S // bk
+    # q and kv pad independently to their own block multiple (never to
+    # lcm(bq, bk), which explodes for divisor-unfriendly clamps)
+    Sq = -(-S // bq) * bq
+    Sk = -(-S // bk) * bk
+    if Sq != S:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, Sq - S), (0, 0)])
+    if Sk != S:
+        pad = [(0, 0), (0, 0), (0, Sk - S), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    nq, nk = Sq // bq, Sk // bk
     scale = d ** -0.5
 
     kernel = functools.partial(
         _kernel, scale=scale, bq=bq, bk=bk, nk=nk,
-        causal=causal, window=window)
+        causal=causal, window=window, kv_len=S)
 
     scratch = ([_VMEM((bq, 1), jnp.float32),
                 _VMEM((bq, 1), jnp.float32),
                 _VMEM((bq, d), jnp.float32)] if _VMEM is not None else
                [pl.MemorySpace.ANY] * 3)  # pragma: no cover
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
         in_specs=[
@@ -109,7 +129,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                          lambda b, h, i, j, G=G: (b, h // G, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
         scratch_shapes=scratch,
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :S, :] if Sq != S else out

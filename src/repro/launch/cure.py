@@ -1,0 +1,216 @@
+"""One-shot CURing at paper speed: the end-to-end compression story.
+
+    PYTHONPATH=src python -m repro.launch.cure --arch olmo-1b --smoke \
+        --layers 2 --r-max 32 --report results/cure/olmo.json
+
+Stages (each timed, mirroring the paper's Table-1 "compression time"
+claim): init arch -> calibrate (jitted, device-resident accumulators)
+-> compress (batched shape-class pipeline by default) -> fold C@U ->
+save via ``dist.CheckpointManager`` -> smoke-generate through
+``repro.serving`` (mamba archs fall back to the legacy static engine).
+
+``--report`` writes a JSON whose fields map onto the paper's Table 1:
+``stages_s.total`` ~ compression Time (s), ``params.reduction_pct_model``
+~ parameter reduction, ``weights[].rel_fro_err`` ~ per-weight relative
+Frobenius error (and ``bound``/``bound_on`` the Theorem 3.1 bound and
+the matrix it is valid for).
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import DataConfig, SyntheticLM
+from repro.dist.checkpoint import CheckpointManager
+from repro.models import init_params
+from repro.serve.engine import generate
+from repro.serving import PagedConfig, SamplingParams, Server
+from repro.serving.paged_cache import supports as paged_supports
+
+
+def _smoke_generate(params, cfg, *, n_requests: int, prompt_len: int,
+                    new_tokens: int, max_concurrency: int, seed: int):
+    """Drive the compressed model through the serving runtime (paged
+    continuous batching when the arch supports it, else the legacy
+    static engine). Returns (n_tokens, engine_name)."""
+    rng = np.random.RandomState(seed)
+    if paged_supports(cfg):
+        max_len = prompt_len + new_tokens
+        pc = PagedConfig.sized_for(max_len, max_concurrency)
+        server = Server(params, cfg, pc, max_concurrency=max_concurrency)
+        for i in range(n_requests):
+            prompt = rng.randint(0, cfg.vocab_size, size=prompt_len).tolist()
+            server.submit(prompt, new_tokens,
+                          sampling=SamplingParams(temperature=0.0, seed=i))
+        finished = server.drain()
+        return sum(len(r.out_tokens) for r in finished.values()), "serving"
+    prompts = rng.randint(0, cfg.vocab_size,
+                          size=(n_requests, prompt_len)).astype(np.int32)
+    out = generate(params, cfg, prompts, new_tokens)
+    return int(out.tokens.size), "legacy"
+
+
+def cure(args) -> dict:
+    stages = {}
+    t_total = time.perf_counter()
+
+    # ---- init ---------------------------------------------------------
+    t0 = time.perf_counter()
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{args.arch} uses the embeddings stub")
+    params = jax.block_until_ready(
+        init_params(jax.random.PRNGKey(args.seed), cfg))
+    stages["init"] = time.perf_counter() - t0
+
+    # ---- calibrate ----------------------------------------------------
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                seq_len=args.calib_len,
+                                global_batch=args.calib_batch,
+                                seed=args.seed))
+    batches = [ds.batch_at(i) for i in range(args.calib_batches)]
+    t0 = time.perf_counter()
+    calib = calibrate(params, cfg, batches)
+    stages["calibrate"] = time.perf_counter() - t0
+
+    # ---- compress + fold ----------------------------------------------
+    ccfg = CURConfig(r_max=args.r_max, n_compress_layers=args.layers,
+                     selection=args.selection, svd=args.svd,
+                     fold_u=not args.no_fold, pipeline=args.pipeline,
+                     seed=args.seed)
+    t0 = time.perf_counter()
+    cparams, ccfg_model, info = compress_model(params, cfg, ccfg, calib)
+    dt = time.perf_counter() - t0
+    stages["compress"] = dt - info.seconds_fold
+    stages["fold"] = info.seconds_fold
+
+    # ---- save ---------------------------------------------------------
+    t0 = time.perf_counter()
+    mgr = CheckpointManager(args.ckpt_dir, keep_n=1)
+    mgr.save(0, {"params": cparams})
+    stages["save"] = time.perf_counter() - t0
+
+    # ---- smoke-generate -----------------------------------------------
+    t0 = time.perf_counter()
+    n_tokens, engine = _smoke_generate(
+        cparams, ccfg_model, n_requests=args.n_requests,
+        prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+        max_concurrency=args.max_concurrency, seed=args.seed)
+    stages["generate"] = time.perf_counter() - t0
+    stages["total"] = time.perf_counter() - t_total
+
+    w = info.weights
+    before = sum(x.params_before for x in w)
+    report = {
+        "arch": args.arch,
+        "smoke": args.smoke,
+        "pipeline": args.pipeline,
+        "svd": args.svd,
+        "selection": args.selection,
+        "fold": not args.no_fold,
+        "r_max": args.r_max,
+        "layers_compressed": info.layers,
+        "n_weights": len(w),
+        "stages_s": {k: round(v, 4) for k, v in stages.items()},
+        "params": {
+            "model_total": cfg.param_count(),
+            "targeted_before": before,
+            "after_unfolded": sum(x.params_after_unfolded for x in w),
+            "after_folded": sum(x.params_after_folded for x in w),
+            "after_deployed": sum(x.params_after for x in w),
+            "saved_deployed": info.params_saved,
+            "saved_unfolded": info.params_saved_unfolded,
+            "saved_folded": info.params_saved_folded,
+            "reduction_pct_model": round(
+                100.0 * info.params_saved / max(cfg.param_count(), 1), 3),
+        },
+        "weights": [{
+            "layer": x.layer, "name": x.name, "shape": list(x.shape),
+            "rank": x.rank,
+            "rel_fro_err": round(x.fro_err / max(x.fro_w, 1e-30), 6),
+            "bound": None if np.isnan(x.bound) else round(x.bound, 4),
+            "bound_on": x.bound_on,
+            "seconds": round(x.seconds, 5),
+        } for x in w],
+        "generate": {"tokens": n_tokens, "engine": engine,
+                     "tok_per_s": round(
+                         n_tokens / max(stages["generate"], 1e-9), 1)},
+    }
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="CUR-compress this many layers (angular choice)")
+    ap.add_argument("--r-max", type=int, default=32)
+    ap.add_argument("--selection", default="wanda_deim",
+                    choices=("wanda_deim", "wanda", "deim", "weight",
+                             "random"))
+    ap.add_argument("--svd", default="randomized",
+                    choices=("exact", "randomized"),
+                    help="randomized is the paper-speed default; exact "
+                         "is the paper-faithful reference")
+    ap.add_argument("--pipeline", default="batched",
+                    choices=("batched", "loop"))
+    ap.add_argument("--no-fold", action="store_true",
+                    help="deploy {C,U0,dU,R} (healing form) instead of "
+                         "the folded {CU,R}")
+    ap.add_argument("--calib-batches", type=int, default=2)
+    ap.add_argument("--calib-batch", type=int, default=2)
+    ap.add_argument("--calib-len", type=int, default=64)
+    ap.add_argument("--n-requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-concurrency", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default results/cure/<arch>")
+    ap.add_argument("--report", default=None,
+                    help="write the per-stage timing/params/error JSON "
+                         "here (Table-1 mapping)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.ckpt_dir is None:
+        args.ckpt_dir = os.path.join("results", "cure", args.arch)
+
+    report = cure(args)
+
+    s = report["stages_s"]
+    p = report["params"]
+    print(f"cured {args.arch}{' (smoke)' if args.smoke else ''}: "
+          f"{report['n_weights']} weights in layers "
+          f"{report['layers_compressed']}")
+    print("  " + "  ".join(f"{k}={s[k]:.3f}s" for k in
+                           ("init", "calibrate", "compress", "fold",
+                            "save", "generate", "total")))
+    print(f"  params: targeted {p['targeted_before']/1e3:.0f}k -> "
+          f"deployed {p['after_deployed']/1e3:.0f}k "
+          f"(folded {p['after_folded']/1e3:.0f}k / unfolded "
+          f"{p['after_unfolded']/1e3:.0f}k); "
+          f"model reduction {p['reduction_pct_model']:.2f}%")
+    worst = max(report["weights"], key=lambda x: x["rel_fro_err"],
+                default=None)
+    if worst:
+        print(f"  worst rel fro err: {worst['rel_fro_err']:.4f} "
+              f"(layer {worst['layer']} {worst['name']})")
+    print(f"  generated {report['generate']['tokens']} tokens via "
+          f"{report['generate']['engine']} "
+          f"({report['generate']['tok_per_s']:.1f} tok/s)")
+    if args.report:
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"  report -> {args.report}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ executable.
 from __future__ import annotations
 
 import math
+import os
 from typing import Optional
 
 import jax
@@ -26,6 +27,29 @@ import jax.numpy as jnp
 
 def is_cur(w) -> bool:
     return isinstance(w, dict) and ("C" in w or "CU" in w)
+
+
+# REPRO_CUR_KERNEL: "auto" (default) routes folded {CU, R} weights through
+# the fused Pallas kernel on TPU when the shapes are MXU-worthy; "1"
+# forces the kernel (interpret mode off-TPU — used by the parity tests);
+# "0" forces the plain two-GEMM chain.
+_CUR_KERNEL_ENV = "REPRO_CUR_KERNEL"
+
+
+def use_cur_kernel(m: int, rk: int, n: int) -> bool:
+    """Trace-time gate for dispatching a folded CUR matmul to the fused
+    ``cur_matmul`` Pallas kernel (which keeps the (M, r) intermediate in
+    VMEM instead of round-tripping it through HBM)."""
+    mode = os.environ.get(_CUR_KERNEL_ENV, "auto")
+    if mode == "0":
+        return False
+    if mode == "1":
+        return True
+    # the VMEM-residency win needs MXU-scale operands; tiny smoke shapes
+    # and non-TPU backends (interpret mode) stay on the jnp chain
+    return (jax.default_backend() == "tpu"
+            and m >= 128 and n >= 128 and rk >= 16
+            and m % 8 == 0 and n % 8 == 0)
 
 
 def is_adapter(w) -> bool:
@@ -71,7 +95,11 @@ def apply_w(x: jnp.ndarray, w) -> jnp.ndarray:
     if not is_cur(w):
         return x @ w
     if "CU" in w:
-        return (x @ w["CU"]) @ w["R"]
+        cu, r = w["CU"], w["R"]
+        if use_cur_kernel(cu.shape[0], cu.shape[1], r.shape[1]):
+            from repro.kernels.cur_matmul.ops import cur_matmul_op
+            return cur_matmul_op(x, cu.astype(x.dtype), r.astype(x.dtype))
+        return (x @ cu) @ r
     u = (w["U0"] + w["dU"]).astype(x.dtype)
     t = x @ w["C"].astype(x.dtype)
     t = t @ u

@@ -146,6 +146,92 @@ def test_selection_quality_ordering():
     assert errs["deim"] < errs["random"]
 
 
+@pytest.mark.parametrize("svd", ["exact", "randomized"])
+def test_batched_pipeline_matches_loop(tiny_cfg, structured_params, svd):
+    """The tentpole contract: the jitted shape-class-batched pipeline
+    produces the SAME row/col selections and link matrices as the
+    per-weight reference loop on a fixed seed, per shape-class."""
+    calib = calibrate(structured_params, tiny_cfg,
+                      [make_batch(tiny_cfg, 2, 32)])
+    outs = {}
+    for pipeline in ("loop", "batched"):
+        ccfg = CURConfig(r_max=16, n_compress_layers=2, svd=svd,
+                         pipeline=pipeline)
+        outs[pipeline] = compress_model(structured_params, tiny_cfg, ccfg,
+                                        calib)
+    il, ib = outs["loop"][2], outs["batched"][2]
+    assert len(il.weights) == len(ib.weights) > 0
+    shapes = set()
+    for wl, wb in zip(il.weights, ib.weights):
+        assert (wl.layer, wl.name) == (wb.layer, wb.name)
+        np.testing.assert_array_equal(wl.rows, wb.rows)
+        np.testing.assert_array_equal(wl.cols, wb.cols)
+        shapes.add(wl.shape)
+        leaf_l = jax.tree.map(
+            lambda a: a[0], outs["loop"][0]["groups"][wl.layer][0][wl.name])
+        leaf_b = jax.tree.map(
+            lambda a: a[0],
+            outs["batched"][0]["groups"][wb.layer][0][wb.name])
+        np.testing.assert_allclose(np.asarray(leaf_l["U0"]),
+                                   np.asarray(leaf_b["U0"]), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(leaf_l["C"]),
+                                      np.asarray(leaf_b["C"]))
+        np.testing.assert_array_equal(np.asarray(leaf_l["R"]),
+                                      np.asarray(leaf_b["R"]))
+        assert abs(wl.fro_err - wb.fro_err) < 1e-3 * max(wl.fro_w, 1.0)
+    assert len(shapes) >= 2, "want multiple shape-classes exercised"
+
+
+def test_fold_param_accounting():
+    """Satellite bugfix: params_after must reflect the DEPLOYED form —
+    {CU, R} is m r + r n, not the healing-form m r + r^2 + r n."""
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (48, 64))
+    act = np.ones(48)
+    _, heal = compress_weight(W, "wq", 0, CURConfig(r_max=8), act, key)
+    _, fold = compress_weight(W, "wq", 0, CURConfig(r_max=8, fold_u=True),
+                              act, key)
+    m, n, r = 48, 64, heal.rank
+    assert heal.params_after_unfolded == m * r + r * r + r * n
+    assert heal.params_after_folded == m * r + r * n
+    assert heal.params_after == heal.params_after_unfolded
+    assert fold.params_after == fold.params_after_folded
+    assert fold.params_after < heal.params_after
+
+
+def test_compress_info_reports_both_forms(tiny_cfg, structured_params,
+                                          compressed):
+    _, _, info = compressed                      # fold_u=False fixture
+    assert info.params_saved == info.params_saved_unfolded
+    assert info.params_saved_folded > info.params_saved_unfolded
+    calib = calibrate(structured_params, tiny_cfg,
+                      [make_batch(tiny_cfg, 2, 32)])
+    _, _, folded = compress_model(
+        structured_params, tiny_cfg,
+        CURConfig(r_max=16, n_compress_layers=2, fold_u=True), calib)
+    assert folded.params_saved == folded.params_saved_folded
+
+
+def test_bound_labeled_by_matrix():
+    """Satellite bugfix: wanda_deim feeds the SVD of the WANDA matrix S,
+    so its Theorem 3.1 bound is valid for S — bound_on records that.
+    For plain deim the bound is on W itself and must actually hold."""
+    key = jax.random.PRNGKey(3)
+    W = jax.random.normal(key, (64, 48))
+    act = np.abs(np.random.RandomState(0).randn(64)) + 0.1
+    _, wd = compress_weight(
+        W, "w", 0, CURConfig(r_max=8, selection="wanda_deim"), act, key)
+    assert wd.bound_on == "wanda" and np.isfinite(wd.bound)
+    leaf, dm = compress_weight(
+        W, "w", 0, CURConfig(r_max=8, selection="deim"), act, key)
+    assert dm.bound_on == "weight" and np.isfinite(dm.bound)
+    err2 = float(jnp.linalg.norm(W - cur_materialize(leaf), ord=2))
+    assert err2 <= dm.bound * (1 + 1e-3)
+    _, rnd = compress_weight(
+        W, "w", 0, CURConfig(r_max=8, selection="random"), act, key)
+    assert rnd.bound_on == "none" and np.isnan(rnd.bound)
+
+
 def test_selection_methods_all_run():
     key = jax.random.PRNGKey(1)
     W = jax.random.normal(key, (40, 56))

@@ -1,0 +1,43 @@
+"""launch/cure.py end-to-end smoke: init -> calibrate -> compress ->
+fold -> checkpoint save -> serving smoke-generate, on one attention arch
+(paged continuous-batching runtime) and one mamba arch (legacy-engine
+fall-back), with the Table-1-shaped report JSON."""
+import json
+
+import pytest
+
+from repro.dist.checkpoint import CheckpointManager
+from repro.launch.cure import main
+
+_STAGES = ("init", "calibrate", "compress", "fold", "save", "generate",
+           "total")
+
+
+@pytest.mark.parametrize("arch,engine", [
+    ("olmo-1b", "serving"),
+    ("mamba2-1.3b", "legacy"),
+])
+def test_cure_cli_smoke(arch, engine, tmp_path):
+    report = main([
+        "--arch", arch, "--smoke", "--layers", "1", "--r-max", "8",
+        "--calib-batches", "1", "--calib-batch", "1", "--calib-len", "32",
+        "--n-requests", "2", "--prompt-len", "8", "--new-tokens", "4",
+        "--max-concurrency", "2",
+        "--ckpt-dir", str(tmp_path / "ckpt"),
+        "--report", str(tmp_path / "cure.json"),
+    ])
+    data = json.loads((tmp_path / "cure.json").read_text())
+    assert data["arch"] == arch
+    for k in _STAGES:
+        assert data["stages_s"][k] >= 0.0
+    assert data["n_weights"] >= 1
+    p = data["params"]
+    assert p["after_folded"] < p["after_unfolded"] < p["targeted_before"]
+    assert p["after_deployed"] == p["after_folded"]   # default folds
+    for w in data["weights"]:
+        assert w["rel_fro_err"] >= 0.0
+        assert w["bound_on"] == "wanda"               # default selection
+    assert data["generate"]["engine"] == engine
+    assert data["generate"]["tokens"] > 0
+    assert CheckpointManager(str(tmp_path / "ckpt")).latest_valid_step() == 0
+    assert report["stages_s"].keys() == data["stages_s"].keys()

@@ -93,6 +93,56 @@ def test_flash_attention_block_shape_independence():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("S,bq,bk,causal", [
+    (100, 32, 32, True),       # ragged: pads to 128
+    (72, 32, 16, False),       # non-causal — padded keys must be masked
+    (130, 64, 64, True),       # just over two tiles
+])
+def test_flash_attention_ragged_seq(S, bq, bk, causal):
+    """Satellite bugfix: ragged S takes the pad-and-slice path instead
+    of the old hard ``assert S % bq == 0`` crash."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 4, S, 16))
+    k = jax.random.normal(ks[1], (1, 2, S, 16))
+    v = jax.random.normal(ks[2], (1, 2, S, 16))
+    y = flash_attention_op(q, k, v, causal=causal, bq=bq, bk=bk)
+    assert y.shape == q.shape
+    yr = flash_attention_ref(q, k, v, causal=causal)
+    _assert_close(y, yr, jnp.float32)
+
+
+def test_flash_attention_gqa_mismatch_raises():
+    """H % K != 0 used to silently floor-divide; now a checked error."""
+    q = jnp.zeros((1, 6, 32, 8))
+    k = v = jnp.zeros((1, 4, 32, 8))
+    with pytest.raises(ValueError, match="GQA"):
+        flash_attention_op(q, k, v, bq=32, bk=32)
+
+
+def test_apply_w_dispatches_to_cur_kernel(monkeypatch):
+    """Folded {CU, R} weights route through the fused Pallas kernel
+    (forced on via REPRO_CUR_KERNEL, interpret mode on CPU) and agree
+    with the plain (x @ CU) @ R chain."""
+    from repro.models import layers
+
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = jax.random.normal(ks[0], (2, 7, 96))      # ragged M = 14
+    w = {"CU": jax.random.normal(ks[1], (96, 16)),
+         "R": jax.random.normal(ks[2], (16, 80))}
+    monkeypatch.setenv("REPRO_CUR_KERNEL", "1")
+    assert layers.use_cur_kernel(96, 16, 80)
+    y = layers.apply_w(x, w)
+    monkeypatch.setenv("REPRO_CUR_KERNEL", "0")
+    assert not layers.use_cur_kernel(96, 16, 80)
+    yr = layers.apply_w(x, w)
+    assert y.shape == (2, 7, 80)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    monkeypatch.delenv("REPRO_CUR_KERNEL")
+    # auto mode never dispatches off-TPU (interpret would be slow)
+    assert not layers.use_cur_kernel(256, 64, 512)
+
+
 def test_flash_matches_model_attention_path():
     """Kernel agrees with the model's chunked-jnp attention (the dry-run
     lowering basis) — same math, two implementations."""
