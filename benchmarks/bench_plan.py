@@ -1,0 +1,115 @@
+"""Uniform r_max vs sensitivity-planned rank allocation at EQUAL params
+(repro.plan): perplexity + planning wall-clock (median-of-3) on the
+trained zoo model.
+
+The uniform baseline compresses the angular-chosen layers at one global
+r_max; the planned run spends the SAME deployed parameter budget, but
+distributed per weight by the greedy marginal-error solver over profiled
+error-vs-rank curves. The planned allocation should match or beat the
+uniform perplexity — that is the subsystem's whole claim.
+
+    PYTHONPATH=src python -m benchmarks.bench_plan [--quick] \
+        [--out plan_bench.json] [--plan-out plan.json]
+"""
+import argparse
+import json
+import time
+
+from benchmarks.common import time_call
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.data.tokens import SyntheticLM
+from repro.plan import plan_for_model
+from repro.train.evaluate import perplexity
+from repro.zoo import data_config, eval_batches, get_trained_repro
+
+N_LAYERS = 3
+R_UNIFORM = 32
+# ×1.5 intermediate points between the power-of-two ranks: a finer grid
+# strands less of the budget to quantization when matching uniform-r32
+GRID = (4, 6, 8, 12, 16, 24, 32, 48, 64)
+
+
+def run(quick=True, out=None, plan_out=None):
+    rows = []
+    params, cfg = get_trained_repro(quick=quick)
+    ds = SyntheticLM(data_config(cfg, seed=1))
+    calib = calibrate(params, cfg, [ds.batch_at(0)])
+    evalb = eval_batches(cfg, n=2 if quick else 4)
+
+    # ---- uniform baseline --------------------------------------------
+    ucfg = CURConfig(r_max=R_UNIFORM, n_compress_layers=N_LAYERS)
+    t0 = time.perf_counter()
+    up, ucfg_m, uinfo = compress_model(params, cfg, ucfg, calib)
+    dt_u = time.perf_counter() - t0
+    ppl_u = perplexity(up, ucfg_m, evalb)
+    budget = sum(w.params_after for w in uinfo.weights)
+    rows.append((f"plan/uniform_r{R_UNIFORM}", dt_u * 1e6,
+                 f"ppl={ppl_u:.2f} params={budget}"))
+
+    # ---- planned allocation at the same params -----------------------
+    pcfg = CURConfig(r_max=max(GRID), n_compress_layers=N_LAYERS)
+
+    def make_plan():
+        return plan_for_model(params, cfg, pcfg, calib,
+                              budget_kind="params", budget_value=budget,
+                              n_layers=N_LAYERS, grid=GRID,
+                              solver="greedy", arch=cfg.name)[0]
+
+    dt_plan = time_call(lambda: make_plan())       # median-of-3
+    plan = make_plan()
+    ccfg = plan.to_cur_config(pcfg)
+    t0 = time.perf_counter()
+    pp, pcfg_m, pinfo = compress_model(params, cfg, ccfg, calib,
+                                       layers=plan.layers)
+    dt_c = time.perf_counter() - t0
+    ppl_p = perplexity(pp, pcfg_m, evalb)
+    realized = sum(w.params_after for w in pinfo.weights)
+    rows.append(("plan/planned_equal_params", (dt_plan + dt_c) * 1e6,
+                 f"ppl={ppl_p:.2f} params={realized}"))
+    rows.append(("plan/plan_time_median3", dt_plan * 1e6,
+                 f"solver=greedy weights={len(plan.ranks)}"))
+    rows.append(("plan/ppl_delta", dt_plan * 1e6,
+                 f"uniform={ppl_u:.2f} planned={ppl_p:.2f} "
+                 f"gain={(ppl_u - ppl_p):.3f}"))
+
+    if plan_out is not None:
+        plan.save(plan_out)
+    if out is not None:
+        with open(out, "w") as f:
+            json.dump({
+                "config": cfg.name,
+                "n_layers_compressed": N_LAYERS,
+                "budget_params": budget,
+                "realized_params": realized,
+                "uniform": {"r_max": R_UNIFORM, "ppl": round(ppl_u, 4),
+                            "compress_s": round(dt_u, 4)},
+                "planned": {"ranks": plan.ranks, "ppl": round(ppl_p, 4),
+                            "plan_s_median3": round(dt_plan, 4),
+                            "compress_s": round(dt_c, 4),
+                            "solver": plan.solver,
+                            "grid": list(GRID)},
+                "ppl_gain": round(ppl_u - ppl_p, 4),
+                "rows": [{"name": r[0], "us": round(r[1], 1),
+                          "derived": r[2]} for r in rows],
+            }, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True,
+                    help="CI-sized run (default)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep sizes (slower)")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    ap.add_argument("--plan-out", default=None,
+                    help="write the winning CompressionPlan JSON here")
+    args = ap.parse_args()
+    from benchmarks.common import emit
+    print("name,us_per_call,derived")
+    emit(run(quick=not args.full, out=args.out, plan_out=args.plan_out))
+
+
+if __name__ == "__main__":
+    main()

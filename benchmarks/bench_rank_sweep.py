@@ -1,12 +1,18 @@
 """Paper Table 3 / Fig. 9 (App. C.2): r_max sweep — time, size reduction,
-perplexity. Scaled ranks for the CPU model (paper: 128/256/512)."""
+approximation error. Scaled ranks for the CPU model (paper: 128/256/512).
+
+Rewired onto ``repro.plan``'s sensitivity profiler: ONE jitted profile
+pass yields the error-vs-rank curve of every target weight at every grid
+rank, replacing the seed version's full recompression per r (the sweep
+cost is now one SVD + |grid| link solves per weight instead of |grid|
+complete compression runs)."""
 import time
 
 from repro.configs.base import CURConfig
-from repro.core import calibrate, compress_model
+from repro.core import angular, calibrate
 from repro.data.tokens import SyntheticLM
-from repro.train.evaluate import perplexity
-from repro.zoo import data_config, eval_batches, get_trained_repro
+from repro.plan import profile_sensitivity, weight_cost
+from repro.zoo import data_config, get_trained_repro
 
 
 def run(quick=True):
@@ -14,17 +20,32 @@ def run(quick=True):
     params, cfg = get_trained_repro(quick=quick)
     ds = SyntheticLM(data_config(cfg, seed=1))
     calib = calibrate(params, cfg, [ds.batch_at(0)])
-    evalb = eval_batches(cfg, n=2)
     ranks = (32, 64) if quick else (16, 32, 64, 128)
+
+    layers = angular.select_layers(
+        angular.layer_distances(calib.hidden), 3, "angular", 0)
+    t0 = time.perf_counter()
+    profile = profile_sensitivity(
+        params, cfg, CURConfig(r_max=max(ranks)), calib, grid=ranks,
+        layers=layers)
+    dt = time.perf_counter() - t0
+    rows.append(("table3/profile_pass", dt * 1e6,
+                 f"weights={len(profile.curves)} grid={len(ranks)}"))
+
     for r in ranks:
-        t0 = time.perf_counter()
-        sp, scfg, info = compress_model(
-            params, cfg, CURConfig(r_max=r, n_compress_layers=3), calib)
-        dt = time.perf_counter() - t0
-        ppl = perplexity(sp, scfg, evalb)
-        rows.append((f"table3/rmax_{r}", dt * 1e6,
-                     f"saved={info.params_saved*4/2**20:.2f}MiB "
-                     f"ppl={ppl:.2f}"))
+        saved = errs = n = 0
+        for c in profile.curves:
+            if r not in c.grid:
+                continue
+            m, nn = c.shape
+            saved += m * nn - weight_cost(m, nn, r, "params", fold_u=False,
+                                          dtype_bytes=4)
+            errs += float(c.rel_err[c.grid.index(r)])
+            n += 1
+        # per-r slice of the single profile pass (amortized time)
+        rows.append((f"table3/rmax_{r}", dt / len(ranks) * 1e6,
+                     f"saved={saved*4/2**20:.2f}MiB "
+                     f"relerr={errs/max(n,1):.4f}"))
     return rows
 
 

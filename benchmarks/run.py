@@ -13,7 +13,8 @@ from benchmarks.common import emit
 MODULES = [
     "bench_compression",          # Table 1 (+ randomized-SVD speedup)
     "bench_weight_selection",     # Table 2 / Fig 8
-    "bench_rank_sweep",           # Table 3 / Fig 9
+    "bench_rank_sweep",           # Table 3 / Fig 9 (one profile pass)
+    "bench_plan",                 # uniform vs budget-planned allocation
     "bench_layers_quality",       # Fig 4 + Table 4 / Fig 11
     "bench_selection_quality",    # Table 5 / Fig 12
     "bench_healing",              # Fig 5

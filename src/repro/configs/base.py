@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Mapping, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Block specs
@@ -226,6 +226,15 @@ class CURConfig:
     # "batched": jitted + vmapped per shape-class (fast path);
     # "loop": per-weight reference — identical selections on fixed seeds
     pipeline: str = "batched"
+    # per-weight rank allocation keyed "layer:name" (e.g. "3:wq"), as
+    # emitted by ``repro.plan``. When set it is the COMPLETE allocation:
+    # only the listed weights are compressed (a plan may deliberately
+    # leave a weight dense when no rank saves parameters), at exactly the
+    # listed ranks. Validated by ``compress_model``: keys must name
+    # weights in the target set of the selected layers and ranks must
+    # satisfy 1 <= r <= min(m, n). Both pipelines honor the allocation
+    # identically (batched groups by (m, n, r)).
+    ranks: Optional[Mapping[str, int]] = None
 
 
 # ---------------------------------------------------------------------------

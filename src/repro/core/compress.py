@@ -140,6 +140,50 @@ def _bound_on(selection: str) -> str:
     return {"wanda_deim": "wanda", "deim": "weight"}.get(selection, "none")
 
 
+def rank_key(layer: int, name: str) -> str:
+    """The ``CURConfig.ranks`` / ``CompressionPlan.ranks`` key format."""
+    return f"{layer}:{name}"
+
+
+def resolve_rank(m: int, n: int, layer: int, name: str,
+                 cur_cfg: CURConfig) -> int:
+    """Per-weight rank: the ``cur_cfg.ranks`` override when present
+    (repro.plan allocations), else the uniform Eq. 2 cap."""
+    if cur_cfg.ranks:
+        r = cur_cfg.ranks.get(rank_key(layer, name))
+        if r is not None:
+            return int(r)
+    return rank_for(m, n, cur_cfg.r_max)
+
+
+def _validate_ranks(params, cfg: ModelConfig, cur_cfg: CURConfig,
+                    layer_set) -> None:
+    """Every override key must name a still-dense 2-D weight in the target
+    set, lie in a selected layer, and carry a feasible rank."""
+    if not cur_cfg.ranks:
+        return
+    valid: Dict[str, Tuple[int, int]] = {}
+    for li, spec, lp in iter_layer_params(params, cfg):
+        for t in cfg.cur_targets:
+            W = lp.get(t)
+            if W is None or isinstance(W, dict) or W.ndim != 2:
+                continue
+            valid[rank_key(li, t)] = W.shape
+    for k, r in cur_cfg.ranks.items():
+        if k not in valid:
+            raise ValueError(
+                f"rank override {k!r} does not name a compressible target "
+                f"weight (targets: {cfg.cur_targets})")
+        m, n = valid[k]
+        if not 1 <= int(r) <= min(m, n):
+            raise ValueError(
+                f"rank override {k!r}={r} outside [1, min{(m, n)}]")
+        if int(k.split(":")[0]) not in layer_set:
+            raise ValueError(
+                f"rank override {k!r} targets a layer not being compressed "
+                f"(selected: {sorted(layer_set)})")
+
+
 def _param_counts(m: int, n: int, r: int, fold_u: bool):
     """(before, after_unfolded, after_folded, after_deployed)."""
     unfolded = m * r + r * r + r * n
@@ -149,11 +193,11 @@ def _param_counts(m: int, n: int, r: int, fold_u: bool):
 
 def compress_weight(W: jnp.ndarray, name: str, layer: int,
                     cur_cfg: CURConfig, act_sq: Optional[np.ndarray],
-                    key) -> Tuple[dict, WeightInfo]:
+                    key, rank: Optional[int] = None) -> Tuple[dict, WeightInfo]:
     """Single-weight reference path (also the ``pipeline="loop"`` body)."""
     t0 = time.perf_counter()
     m, n = W.shape
-    r = rank_for(m, n, cur_cfg.r_max)
+    r = rank if rank is not None else resolve_rank(m, n, layer, name, cur_cfg)
     p, q, aux = select_indices(W, r, cur_cfg.selection, act_sq, key,
                                cur_cfg.svd)
     C, U, R = cur_from_indices(W.astype(jnp.float32), p, q)
@@ -193,6 +237,7 @@ class _WorkItem:
     W: jnp.ndarray
     act: Optional[np.ndarray]
     key: jax.Array
+    rank: int = 0
 
 
 @functools.partial(jax.jit, static_argnames=("r", "selection", "svd"))
@@ -226,16 +271,18 @@ _WARM_CLASSES: set = set()
 
 
 def _compress_batched(work: List[_WorkItem], cur_cfg: CURConfig):
-    """Run the work list grouped by (m, n) shape-class; returns
-    (leaf, WeightInfo) per item, in work-list order."""
-    classes: Dict[Tuple[int, int], List[int]] = {}
+    """Run the work list grouped by (m, n, r) shape-class; returns
+    (leaf, WeightInfo) per item, in work-list order. The rank joins the
+    class key so per-weight overrides (``CURConfig.ranks``) batch
+    correctly — same-shape weights at different planned ranks land in
+    different vmapped calls."""
+    classes: Dict[Tuple[int, int, int], List[int]] = {}
     for i, it in enumerate(work):
-        classes.setdefault(tuple(it.W.shape), []).append(i)
+        classes.setdefault(tuple(it.W.shape) + (it.rank,), []).append(i)
 
     results: List[Optional[Tuple[dict, WeightInfo]]] = [None] * len(work)
-    for (m, n), idxs in classes.items():
+    for (m, n, r), idxs in classes.items():
         t0 = time.perf_counter()
-        r = rank_for(m, n, cur_cfg.r_max)
         Ws = jnp.stack([work[i].W for i in idxs])
         acts = jnp.stack([
             jnp.asarray(work[i].act, jnp.float32) if work[i].act is not None
@@ -317,14 +364,24 @@ def _cur_work_list(params, cfg: ModelConfig, cur_cfg: CURConfig,
             if t not in lp:
                 continue
             W = lp[t]
+            if isinstance(W, dict):              # already CUR-compressed
+                continue                         # (progressive later round)
             if W.ndim != 2:                      # (e.g. MoE expert stacks)
+                continue
+            if cur_cfg.ranks and rank_key(li, t) not in cur_cfg.ranks:
+                # a ranks map IS the complete allocation (a plan): weights
+                # it omits — e.g. too small for any profiled rank to save
+                # params — stay dense, so the executed compression matches
+                # the plan's realized-budget accounting exactly
                 continue
             key, sub = jax.random.split(key)
             act = calib.act_sq[li].get(t) if calib.act_sq else None
             if act is None and cur_cfg.selection in ("wanda_deim", "wanda"):
                 raise ValueError(
                     f"no calibration activations for layer {li} weight {t}")
-            work.append(_WorkItem(li, t, W, act, sub))
+            work.append(_WorkItem(li, t, W, act, sub,
+                                  resolve_rank(W.shape[0], W.shape[1],
+                                               li, t, cur_cfg)))
     return work
 
 
@@ -338,6 +395,7 @@ def compress_model(params, cfg: ModelConfig, cur_cfg: CURConfig,
             distances, cur_cfg.n_compress_layers,
             cur_cfg.layer_selection, cur_cfg.seed)
     layer_set = set(layers)
+    _validate_ranks(params, cfg, cur_cfg, layer_set)
 
     new_cfg = unrolled_config(cfg)
     new_params = unroll_params(params, cfg)
@@ -345,7 +403,8 @@ def compress_model(params, cfg: ModelConfig, cur_cfg: CURConfig,
     work = _cur_work_list(params, cfg, cur_cfg, calib, layer_set)
     if cur_cfg.pipeline == "loop":
         results = [compress_weight(it.W, it.name, it.layer, cur_cfg,
-                                   it.act, it.key) for it in work]
+                                   it.act, it.key, rank=it.rank)
+                   for it in work]
     elif cur_cfg.pipeline == "batched":
         results = _compress_batched(work, cur_cfg)
     else:

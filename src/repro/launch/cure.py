@@ -16,6 +16,7 @@ Frobenius error (and ``bound``/``bound_on`` the Theorem 3.1 bound and
 the matrix it is valid for).
 """
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -26,9 +27,11 @@ import numpy as np
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
+from repro.core.compress import rank_key
 from repro.data.tokens import DataConfig, SyntheticLM
 from repro.dist.checkpoint import CheckpointManager
 from repro.models import init_params
+from repro.plan import CompressionPlan, config_hash, plan_for_model
 from repro.serve.engine import generate
 from repro.serving import PagedConfig, SamplingParams, Server
 from repro.serving.paged_cache import supports as paged_supports
@@ -79,13 +82,44 @@ def cure(args) -> dict:
     calib = calibrate(params, cfg, batches)
     stages["calibrate"] = time.perf_counter() - t0
 
-    # ---- compress + fold ----------------------------------------------
+    # ---- plan (repro.plan: budget -> per-weight ranks) ----------------
     ccfg = CURConfig(r_max=args.r_max, n_compress_layers=args.layers,
                      selection=args.selection, svd=args.svd,
                      fold_u=not args.no_fold, pipeline=args.pipeline,
                      seed=args.seed)
+    plan, plan_source, layers = None, "uniform", None
     t0 = time.perf_counter()
-    cparams, ccfg_model, info = compress_model(params, cfg, ccfg, calib)
+    if args.plan:
+        plan = CompressionPlan.load(args.plan)
+        plan_source = "file"
+        if plan.provenance.get("cfg_hash") != config_hash(cfg):
+            print(f"  WARNING: plan {args.plan} was computed for a "
+                  f"different model config (cfg_hash mismatch) — "
+                  f"selections may not reproduce")
+        # the plan pins everything the key stream + selections depend on
+        ccfg = plan.to_cur_config(
+            dataclasses.replace(ccfg, pipeline=args.pipeline))
+        layers = plan.layers
+    elif args.budget is not None:
+        kind, value = args.budget
+        plan, _ = plan_for_model(
+            params, cfg, ccfg, calib, budget_kind=kind, budget_value=value,
+            n_layers=args.layers, grid=args.grid, solver=args.solver,
+            arch=cfg.name)
+        plan_source = "budget"
+        ccfg = plan.to_cur_config(
+            dataclasses.replace(ccfg, pipeline=args.pipeline))
+        layers = plan.layers
+        if args.emit_plan:
+            os.makedirs(os.path.dirname(args.emit_plan) or ".",
+                        exist_ok=True)
+            plan.save(args.emit_plan)
+    stages["plan"] = time.perf_counter() - t0
+
+    # ---- compress + fold ----------------------------------------------
+    t0 = time.perf_counter()
+    cparams, ccfg_model, info = compress_model(params, cfg, ccfg, calib,
+                                               layers=layers)
     dt = time.perf_counter() - t0
     stages["compress"] = dt - info.seconds_fold
     stages["fold"] = info.seconds_fold
@@ -107,6 +141,25 @@ def cure(args) -> dict:
 
     w = info.weights
     before = sum(x.params_before for x in w)
+    after_deployed = sum(x.params_after for x in w)
+    # realized-vs-requested budget + the per-weight assigned ranks, for
+    # every run (uniform runs report requested=None) — Table 1 rows are
+    # only meaningful alongside the allocation that produced them
+    plan_report = {
+        "source": plan_source,                    # uniform | budget | file
+        "ranks": {rank_key(x.layer, x.name): x.rank for x in w},
+        "budget": {
+            "kind": plan.budget_kind if plan else "params",
+            "requested": plan.budget_requested if plan else None,
+            "realized_params": after_deployed,
+            "realized_fraction": round(after_deployed / max(before, 1), 6),
+            "feasible": plan.feasible if plan else None,
+        },
+    }
+    if plan:
+        plan_report["solver"] = plan.solver
+        plan_report["provenance"] = dict(plan.provenance)
+        plan_report["budget"]["realized"] = dict(plan.realized)
     report = {
         "arch": args.arch,
         "smoke": args.smoke,
@@ -117,6 +170,7 @@ def cure(args) -> dict:
         "r_max": args.r_max,
         "layers_compressed": info.layers,
         "n_weights": len(w),
+        "plan": plan_report,
         "stages_s": {k: round(v, 4) for k, v in stages.items()},
         "params": {
             "model_total": cfg.param_count(),
@@ -164,6 +218,22 @@ def main(argv=None):
     ap.add_argument("--no-fold", action="store_true",
                     help="deploy {C,U0,dU,R} (healing form) instead of "
                          "the folded {CU,R}")
+    # budget-driven planning (repro.plan)
+    ap.add_argument("--plan", default=None,
+                    help="execute a saved CompressionPlan JSON (pins "
+                         "ranks/layers/selection/svd/seed — reproduces "
+                         "the emitting run's exact selections)")
+    ap.add_argument("--budget-params", type=float, default=None,
+                    help="<=1: fraction of targeted dense params; >1: "
+                         "absolute count — allocates per-weight ranks")
+    ap.add_argument("--budget-bytes", type=float, default=None)
+    ap.add_argument("--budget-latency-ms", type=float, default=None)
+    ap.add_argument("--solver", default="greedy", choices=("greedy", "dp"))
+    ap.add_argument("--grid", default=None,
+                    help="comma-separated planning rank grid")
+    ap.add_argument("--emit-plan", default=None,
+                    help="write the allocated plan JSON here (budget "
+                         "runs only)")
     ap.add_argument("--calib-batches", type=int, default=2)
     ap.add_argument("--calib-batch", type=int, default=2)
     ap.add_argument("--calib-len", type=int, default=64)
@@ -180,6 +250,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.ckpt_dir is None:
         args.ckpt_dir = os.path.join("results", "cure", args.arch)
+    budgets = [(k, v) for k, v in (
+        ("params", args.budget_params), ("bytes", args.budget_bytes),
+        ("latency_ms", args.budget_latency_ms)) if v is not None]
+    if len(budgets) > 1 or (budgets and args.plan):
+        raise SystemExit("pass at most one of --plan / --budget-params / "
+                         "--budget-bytes / --budget-latency-ms")
+    args.budget = budgets[0] if budgets else None
+    if args.grid:
+        args.grid = tuple(int(x) for x in args.grid.split(","))
 
     report = cure(args)
 
@@ -189,8 +268,15 @@ def main(argv=None):
           f"{report['n_weights']} weights in layers "
           f"{report['layers_compressed']}")
     print("  " + "  ".join(f"{k}={s[k]:.3f}s" for k in
-                           ("init", "calibrate", "compress", "fold",
-                            "save", "generate", "total")))
+                           ("init", "calibrate", "plan", "compress",
+                            "fold", "save", "generate", "total")))
+    pl = report["plan"]
+    if pl["source"] != "uniform":
+        b = pl["budget"]
+        print(f"  plan[{pl['source']}/{pl.get('solver', '?')}] "
+              f"budget[{b['kind']}]: requested {b['requested']:.4g} -> "
+              f"realized fraction {b['realized_fraction']:.3f} "
+              f"ranks {pl['ranks']}")
     print(f"  params: targeted {p['targeted_before']/1e3:.0f}k -> "
           f"deployed {p['after_deployed']/1e3:.0f}k "
           f"(folded {p['after_folded']/1e3:.0f}k / unfolded "

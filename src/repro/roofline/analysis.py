@@ -148,6 +148,28 @@ class Roofline:
         return self.model_flops_global / denom if denom else 0.0
 
 
+def gemm_latency_s(m: int, n: int, *, dtype_bytes: int = 2,
+                   batch: int = 1) -> float:
+    """Single-chip roofline latency of x (batch, m) @ W (m, n): the max of
+    the compute and weight-HBM-traffic terms. At decode batch sizes the
+    memory term dominates — weight bytes stream once per step."""
+    flops = 2.0 * batch * m * n
+    mem = float(m) * n * dtype_bytes
+    return max(flops / PEAK_FLOPS, mem / HBM_BW)
+
+
+def cur_latency_s(m: int, n: int, r: int, *, dtype_bytes: int = 2,
+                  batch: int = 1, folded: bool = True) -> float:
+    """Roofline latency of the CUR matmul chain replacing a dense (m, n)
+    weight: x @ CU (m, r) then @ R (r, n) when folded, with the extra
+    (r, r) link hop otherwise. This is the per-weight cost model behind
+    ``repro.plan``'s ``--budget-latency-ms`` allocation."""
+    t = gemm_latency_s(m, r, dtype_bytes=dtype_bytes, batch=batch)
+    if not folded:
+        t += gemm_latency_s(r, r, dtype_bytes=dtype_bytes, batch=batch)
+    return t + gemm_latency_s(r, n, dtype_bytes=dtype_bytes, batch=batch)
+
+
 def model_flops(cfg, shape) -> float:
     """6·N_active·tokens (train) / 2·N_active·tokens (prefill/decode)."""
     n = cfg.active_param_count()

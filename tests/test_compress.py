@@ -182,6 +182,44 @@ def test_batched_pipeline_matches_loop(tiny_cfg, structured_params, svd):
     assert len(shapes) >= 2, "want multiple shape-classes exercised"
 
 
+def test_batched_pipeline_matches_loop_with_rank_overrides(
+        tiny_cfg, structured_params):
+    """PR 3's equivalence contract extended to per-weight rank overrides
+    (CURConfig.ranks): heterogeneous ranks — including two same-shape
+    weights at DIFFERENT ranks, which forces the batched pipeline to
+    split the (m, n) class by rank — still yield identical selections
+    and link matrices across the two pipelines."""
+    calib = calibrate(structured_params, tiny_cfg,
+                      [make_batch(tiny_cfg, 2, 32)])
+    ranks = {"1:wq": 8, "1:wk": 4, "1:w_gate": 16,
+             "2:wq": 4, "2:wk": 4, "2:w_gate": 8}
+    outs = {}
+    for pipeline in ("loop", "batched"):
+        ccfg = CURConfig(r_max=16, ranks=ranks, pipeline=pipeline)
+        outs[pipeline] = compress_model(structured_params, tiny_cfg, ccfg,
+                                        calib, layers=[1, 2])
+    il, ib = outs["loop"][2], outs["batched"][2]
+    assert len(il.weights) == len(ib.weights) == len(ranks)
+    for wl, wb in zip(il.weights, ib.weights):
+        key = f"{wl.layer}:{wl.name}"
+        assert wl.rank == wb.rank == ranks[key]
+        np.testing.assert_array_equal(wl.rows, wb.rows)
+        np.testing.assert_array_equal(wl.cols, wb.cols)
+        leaf_l = jax.tree.map(
+            lambda a: a[0], outs["loop"][0]["groups"][wl.layer][0][wl.name])
+        leaf_b = jax.tree.map(
+            lambda a: a[0],
+            outs["batched"][0]["groups"][wb.layer][0][wb.name])
+        np.testing.assert_allclose(np.asarray(leaf_l["U0"]),
+                                   np.asarray(leaf_b["U0"]), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(leaf_l["C"]),
+                                      np.asarray(leaf_b["C"]))
+    # same-shape weights really did land at different ranks
+    shapes_at_ranks = {(wl.shape, wl.rank) for wl in il.weights}
+    shapes = [s for s, _ in shapes_at_ranks]
+    assert any(shapes.count(s) > 1 for s in set(shapes))
+
+
 def test_fold_param_accounting():
     """Satellite bugfix: params_after must reflect the DEPLOYED form —
     {CU, R} is m r + r n, not the healing-form m r + r^2 + r n."""

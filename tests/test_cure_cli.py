@@ -9,8 +9,8 @@ import pytest
 from repro.dist.checkpoint import CheckpointManager
 from repro.launch.cure import main
 
-_STAGES = ("init", "calibrate", "compress", "fold", "save", "generate",
-           "total")
+_STAGES = ("init", "calibrate", "plan", "compress", "fold", "save",
+           "generate", "total")
 
 
 @pytest.mark.parametrize("arch,engine", [
@@ -41,3 +41,54 @@ def test_cure_cli_smoke(arch, engine, tmp_path):
     assert data["generate"]["tokens"] > 0
     assert CheckpointManager(str(tmp_path / "ckpt")).latest_valid_step() == 0
     assert report["stages_s"].keys() == data["stages_s"].keys()
+    # uniform runs still report the assigned ranks + realized budget
+    pl = data["plan"]
+    assert pl["source"] == "uniform"
+    assert len(pl["ranks"]) == data["n_weights"]
+    assert pl["budget"]["requested"] is None
+    assert 0.0 < pl["budget"]["realized_fraction"] < 1.0
+
+
+def _hash_ckpt(d):
+    import hashlib
+    import os
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(str(d))):
+        for f in sorted(files):
+            h.update(f.encode())
+            with open(os.path.join(root, f), "rb") as fh:
+                h.update(fh.read())
+    return h.hexdigest()
+
+
+def test_cure_cli_budget_plan_roundtrip(tmp_path):
+    """A --budget-* run emits a CompressionPlan; re-running with --plan
+    must reproduce the exact same selections and factors (bit-identical
+    checkpoint), and both reports carry the allocation + realized vs
+    requested budget."""
+    common = [
+        "--arch", "olmo-1b", "--smoke", "--layers", "1", "--r-max", "16",
+        "--calib-batches", "1", "--calib-batch", "1", "--calib-len", "32",
+        "--n-requests", "2", "--prompt-len", "8", "--new-tokens", "4",
+        "--max-concurrency", "2",
+    ]
+    rep_a = main(common + [
+        "--budget-params", "0.5", "--grid", "4,8,16",
+        "--emit-plan", str(tmp_path / "plan.json"),
+        "--ckpt-dir", str(tmp_path / "a"),
+        "--report", str(tmp_path / "a.json")])
+    rep_b = main(common + [
+        "--plan", str(tmp_path / "plan.json"),
+        "--ckpt-dir", str(tmp_path / "b"),
+        "--report", str(tmp_path / "b.json")])
+
+    assert rep_a["plan"]["source"] == "budget"
+    assert rep_b["plan"]["source"] == "file"
+    assert rep_a["plan"]["ranks"] == rep_b["plan"]["ranks"]
+    for rep in (rep_a, rep_b):
+        b = rep["plan"]["budget"]
+        assert b["kind"] == "params" and b["feasible"]
+        assert b["realized"]["params_after"] <= b["requested"] * (1 + 1e-9)
+        assert rep["plan"]["solver"] == "greedy"
+        assert {w["name"] for w in rep["weights"]} <= {"wq", "wk", "w_gate"}
+    assert _hash_ckpt(tmp_path / "a") == _hash_ckpt(tmp_path / "b")

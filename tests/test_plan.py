@@ -1,0 +1,310 @@
+"""repro.plan: sensitivity profiling, budget allocation, plan artifact,
+rank-override validation, and the progressive compress->heal executor.
+
+The zoo-model tests at the bottom enforce the subsystem's acceptance
+claims: a planned allocation at the uniform-r_max budget matches or
+beats the uniform perplexity, and a staged two-round plan matches or
+beats one-shot at the same final budget and heal-step count."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import CURConfig
+from repro.core import calibrate, compress_model
+from repro.plan import (
+    CompressionPlan,
+    allocate,
+    default_grid,
+    feasible_grid,
+    plan_for_model,
+    profile_sensitivity,
+    progressive_cure,
+)
+from repro.plan.allocate import PLAN_VERSION
+
+from conftest import make_batch
+
+GRID = (4, 8, 16)
+
+
+@pytest.fixture(scope="module")
+def tiny_calib(tiny_cfg, tiny_params):
+    return calibrate(tiny_params, tiny_cfg, [make_batch(tiny_cfg, 2, 32)])
+
+
+@pytest.fixture(scope="module")
+def tiny_profile(tiny_cfg, tiny_params, tiny_calib):
+    return profile_sensitivity(tiny_params, tiny_cfg, CURConfig(r_max=16),
+                               tiny_calib, grid=GRID)
+
+
+# ---------------------------------------------------------------------------
+# sensitivity
+# ---------------------------------------------------------------------------
+
+def test_profile_covers_targets_and_curves_decrease(tiny_cfg, tiny_profile):
+    prof = tiny_profile
+    layers = {c.layer for c in prof.curves}
+    assert layers == set(range(1, tiny_cfg.n_layers - 1))
+    names = {c.name for c in prof.curves}
+    assert names == set(tiny_cfg.cur_targets)
+    for c in prof.curves:
+        assert c.grid == feasible_grid(c.shape[0], c.shape[1], GRID)
+        assert len(c.grid) >= 1
+        # more rank, less (or equal) error — both metrics
+        assert all(np.diff(c.rel_err) <= 1e-6)
+        assert all(np.diff(c.func_err) <= 1e-6)
+        assert np.all(c.rel_err >= 0) and np.all(c.rel_err <= 1.5)
+        assert c.bound_on == "wanda"
+        assert np.all(c.bound[np.isfinite(c.bound)] >= 0)
+    assert prof.cfg_hash and prof.calib_hash
+    assert prof.distances.shape == (tiny_cfg.n_layers,)
+
+
+def test_profile_rejects_non_deim_selection(tiny_cfg, tiny_params,
+                                            tiny_calib):
+    with pytest.raises(ValueError):
+        profile_sensitivity(tiny_params, tiny_cfg,
+                            CURConfig(selection="random"), tiny_calib)
+
+
+def test_profiled_error_matches_executed_compression(tiny_cfg, tiny_params,
+                                                     tiny_calib,
+                                                     tiny_profile):
+    """The curves must predict what compress_model actually realizes:
+    DEIM prefix-consistency makes the profiled selection at rank r
+    identical to the executed one (exact SVD), so the per-weight relative
+    errors agree to float tolerance."""
+    prof = tiny_profile
+    ranks = {c.key: int(c.grid[min(1, len(c.grid) - 1)])
+             for c in prof.curves if c.layer in (1, 2)}
+    ccfg = CURConfig(r_max=16, ranks=ranks)
+    _, _, info = compress_model(tiny_params, tiny_cfg, ccfg, tiny_calib,
+                                layers=[1, 2])
+    by_key = {f"{w.layer}:{w.name}": w for w in info.weights}
+    assert set(by_key) == set(ranks)
+    for c in prof.curves:
+        if c.key not in ranks:
+            continue
+        w = by_key[c.key]
+        assert w.rank == ranks[c.key]
+        predicted = float(c.rel_err[c.grid.index(w.rank)])
+        realized = w.fro_err / max(w.fro_w, 1e-30)
+        assert abs(predicted - realized) < 1e-4, (c.key, predicted, realized)
+
+
+# ---------------------------------------------------------------------------
+# allocation
+# ---------------------------------------------------------------------------
+
+def test_allocate_respects_budget_and_dp_is_optimal(tiny_profile):
+    budget = 0.5
+    plans = {s: allocate(tiny_profile, "params", budget, solver=s,
+                         fold_u=False, arch="tiny") for s in ("greedy", "dp")}
+    for s, plan in plans.items():
+        assert plan.feasible, s
+        assert (plan.realized["params_after"]
+                <= plan.budget_requested * (1 + 1e-9)), s
+        assert set(plan.ranks) == {c.key for c in tiny_profile.curves}
+    # the DP is exact at unit cost resolution; greedy is a heuristic
+    assert (plans["dp"].predicted["objective"]
+            <= plans["greedy"].predicted["objective"] * (1 + 1e-9))
+
+
+def test_allocate_latency_and_bytes_budgets(tiny_profile):
+    for solver in ("greedy", "dp"):
+        for kind, value in (("bytes", 0.5), ("latency_ms", 1.0)):
+            plan = allocate(tiny_profile, kind, value, fold_u=False,
+                            solver=solver)
+            assert plan.feasible, (solver, kind)
+            assert (plan.realized[f"{kind}_after"]
+                    <= plan.budget_requested * (1 + 1e-9))
+            # the sub-unit latency costs must not starve the DP knapsack:
+            # a loose budget should buy more than the grid-minimum ranks
+            assert any(plan.ranks[c.key] > c.grid[0]
+                       for c in tiny_profile.curves), (solver, kind)
+    with pytest.raises(ValueError):
+        allocate(tiny_profile, "flops", 0.5)
+
+
+def test_allocate_infeasible_budget_flagged(tiny_profile):
+    plan = allocate(tiny_profile, "params", 8.0, fold_u=False)  # 8 params
+    assert not plan.feasible
+    for c in tiny_profile.curves:
+        assert plan.ranks[c.key] == c.grid[0]     # pinned to grid minimum
+
+
+def test_plan_json_roundtrip(tiny_profile):
+    plan = allocate(tiny_profile, "params", 0.5, arch="tiny", fold_u=True)
+    clone = CompressionPlan.from_json(plan.to_json())
+    assert clone == plan
+    assert clone.version == PLAN_VERSION
+    bad = plan.to_json().replace(f'"version": {PLAN_VERSION}',
+                                 '"version": 999')
+    with pytest.raises(ValueError):
+        CompressionPlan.from_json(bad)
+
+
+def test_plan_to_cur_config_executes(tiny_cfg, tiny_params, tiny_calib,
+                                     tiny_profile):
+    plan = allocate(tiny_profile, "params", 0.5, fold_u=False)
+    ccfg = plan.to_cur_config(CURConfig(pipeline="batched"))
+    sp, scfg, info = compress_model(tiny_params, tiny_cfg, ccfg, tiny_calib,
+                                    layers=plan.layers)
+    realized = {f"{w.layer}:{w.name}": w.rank for w in info.weights}
+    assert realized == plan.ranks
+    assert (sum(w.params_after for w in info.weights)
+            == plan.realized["params_after"])
+
+
+# ---------------------------------------------------------------------------
+# CURConfig.ranks validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_ranks_override_validation(tiny_cfg, tiny_params, tiny_calib):
+    # unknown weight name
+    with pytest.raises(ValueError, match="does not name"):
+        compress_model(tiny_params, tiny_cfg,
+                       CURConfig(ranks={"1:nope": 4}), tiny_calib,
+                       layers=[1])
+    # rank beyond min(m, n)
+    with pytest.raises(ValueError, match="outside"):
+        compress_model(tiny_params, tiny_cfg,
+                       CURConfig(ranks={"1:wk": 4096}), tiny_calib,
+                       layers=[1])
+    # valid weight, but its layer is not being compressed
+    with pytest.raises(ValueError, match="not being compressed"):
+        compress_model(tiny_params, tiny_cfg,
+                       CURConfig(ranks={"2:wq": 4}), tiny_calib,
+                       layers=[1])
+
+
+def test_ranks_map_is_the_complete_allocation(tiny_cfg, tiny_params,
+                                              tiny_calib):
+    """A plan may leave a target weight dense (no feasible rank); the
+    executed compression must honor that — only listed weights compress,
+    so realized params match the plan's accounting exactly."""
+    ranks = {"1:wq": 8, "1:w_gate": 8}            # omits 1:wk
+    _, _, info = compress_model(tiny_params, tiny_cfg,
+                                CURConfig(ranks=ranks), tiny_calib,
+                                layers=[1])
+    assert {f"{w.layer}:{w.name}" for w in info.weights} == set(ranks)
+
+
+def test_progressive_skips_empty_round_chunks(tiny_cfg, tiny_params):
+    """rounds > n_layers front-loads zero-size chunks; they must be
+    skipped, not end the run before anything is compressed."""
+    batch = make_batch(tiny_cfg, 2, 32)
+    res = progressive_cure(
+        tiny_params, tiny_cfg, budget_kind="params", budget_value=0.5,
+        n_layers=1, rounds=2, calib_batches=[batch],
+        eval_batches=[make_batch(tiny_cfg, 2, 32, seed=5)], heal_steps=0,
+        cur_cfg=CURConfig(r_max=16, fold_u=False), grid=GRID,
+        max_ppl_increase=100.0)
+    assert len(res.rounds) == 1 and res.rounds[0].accepted
+    assert len(res.rounds[0].layers) == 1
+    assert res.merged_ranks
+
+
+# ---------------------------------------------------------------------------
+# zoo-model acceptance claims (trained weights; cached via repro.zoo)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def zoo():
+    from repro.data.tokens import SyntheticLM
+    from repro.zoo import data_config, eval_batches, get_trained_repro
+    params, cfg = get_trained_repro(quick=True)
+    calib = calibrate(params, cfg,
+                      [SyntheticLM(data_config(cfg, seed=1)).batch_at(0)])
+    return params, cfg, calib, eval_batches(cfg, n=2)
+
+
+def test_planned_matches_or_beats_uniform_at_equal_params(zoo):
+    """Acceptance: at the uniform-r_max parameter budget, the
+    sensitivity-planned allocation achieves ppl <= the uniform baseline."""
+    from repro.train.evaluate import perplexity
+    params, cfg, calib, evalb = zoo
+    up, ucfg, uinfo = compress_model(
+        params, cfg, CURConfig(r_max=32, n_compress_layers=3), calib)
+    ppl_u = perplexity(up, ucfg, evalb)
+    budget = sum(w.params_after for w in uinfo.weights)
+
+    plan, _ = plan_for_model(
+        params, cfg, CURConfig(r_max=64, n_compress_layers=3), calib,
+        budget_kind="params", budget_value=budget, n_layers=3,
+        grid=(4, 6, 8, 12, 16, 24, 32, 48, 64), solver="greedy",
+        arch=cfg.name)
+    assert plan.feasible
+    pp, pcfg, pinfo = compress_model(params, cfg, plan.to_cur_config(),
+                                     calib, layers=plan.layers)
+    assert sum(w.params_after for w in pinfo.weights) <= budget
+    ppl_p = perplexity(pp, pcfg, evalb)
+    assert ppl_p <= ppl_u + 1e-3, (ppl_p, ppl_u)
+    # the allocation is genuinely non-uniform (else the test is vacuous)
+    assert len(set(plan.ranks.values())) > 1
+
+
+def test_progressive_two_rounds_matches_or_beats_oneshot(zoo):
+    """Acceptance satellite: a two-round compress->heal plan improves (or
+    ties) ppl vs one-shot at the SAME final budget and total heal steps."""
+    from repro.data.tokens import SyntheticLM
+    from repro.zoo import data_config
+    params, cfg, calib, evalb = zoo
+    heal = SyntheticLM(data_config(cfg, seed=2))
+    common = dict(budget_kind="params", budget_value=0.3, n_layers=2,
+                  calib_batches=[
+                      SyntheticLM(data_config(cfg, seed=1)).batch_at(0)],
+                  eval_batches=evalb, heal_batch_at=heal.batch_at,
+                  cur_cfg=CURConfig(r_max=64, fold_u=False),
+                  grid=(4, 8, 16, 32, 64), max_ppl_increase=1.0)
+    one = progressive_cure(params, cfg, rounds=1, heal_steps=8, **common)
+    two = progressive_cure(params, cfg, rounds=2, heal_steps=4, **common)
+    assert not one.early_stopped and not two.early_stopped
+    assert len(one.rounds) == 1 and len(two.rounds) == 2
+    # both compressed the same layer count at the same budget fraction
+    assert (sorted(sum((r.layers for r in two.rounds), []))
+            == sorted(one.rounds[0].layers) != [])
+    assert two.ppl_final <= one.ppl_final + 1e-3, (two.ppl_final,
+                                                   one.ppl_final)
+    # healing recovered some of the compression damage in each round
+    for r in two.rounds:
+        assert r.ppl <= r.ppl_compressed + 1e-6
+
+
+def test_progressive_early_stops_on_no_gain_round(zoo):
+    """With healing disabled and zero tolerance, the very first round
+    cannot recover the compression damage -> no-gain round -> the
+    executor reverts to the previous model and stops early."""
+    from repro.data.tokens import SyntheticLM
+    from repro.zoo import data_config
+    params, cfg, calib, evalb = zoo
+    res = progressive_cure(
+        params, cfg, budget_kind="params", budget_value=0.3, n_layers=2,
+        rounds=2, calib_batches=[
+            SyntheticLM(data_config(cfg, seed=1)).batch_at(0)],
+        eval_batches=evalb, heal_steps=0,
+        cur_cfg=CURConfig(r_max=64, fold_u=False),
+        grid=(4, 8, 16, 32, 64), max_ppl_increase=0.0)
+    assert res.early_stopped
+    assert len(res.rounds) == 1 and not res.rounds[0].accepted
+    assert res.ppl_final == res.ppl_initial      # reverted
+    assert res.merged_ranks == {}
+    # the rejected round is still reported for inspection
+    assert res.rounds[0].ranks
+
+
+def test_progressive_rejects_fold_and_absolute_budget(zoo):
+    params, cfg, calib, evalb = zoo
+    with pytest.raises(ValueError, match="unfolded"):
+        progressive_cure(params, cfg, budget_kind="params",
+                         budget_value=0.3, n_layers=1, rounds=1,
+                         calib_batches=[], eval_batches=evalb,
+                         cur_cfg=CURConfig(fold_u=True))
+    with pytest.raises(ValueError, match="fractional"):
+        progressive_cure(params, cfg, budget_kind="params",
+                         budget_value=5000.0, n_layers=1, rounds=1,
+                         calib_batches=[], eval_batches=evalb,
+                         cur_cfg=CURConfig(fold_u=False))
