@@ -1,16 +1,75 @@
 """Kernel-level benchmark: dense matmul vs CUR chain (x@C@U@R) vs folded
-(x@CU@R) wall time + FLOP reduction, and flash vs dense attention. CPU
+(x@CU@R) wall time + FLOP reduction, flash vs dense attention, and the
+skinny-GEMV decode sweep that calibrates the ``apply_w`` auto-gate. CPU
 wall-times are indicative only (TPU is the target); the FLOP/bytes columns
-are the hardware-independent payload."""
+are the hardware-independent payload.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--out f.json]
+"""
+import argparse
+import json
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import time_call
+from benchmarks.common import emit, time_call
 from repro.kernels.cur_matmul.ref import cur_chain_ref, cur_matmul_ref
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
+# decode-shaped row counts: M = concurrency (1..32 typical) up through
+# prefill-bucket sizes — the sweep that locates the kernel/XLA crossover
+SKINNY_MS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def skinny_sweep(m: int, n: int, r: int):
+    """Time the folded-CUR matmul at decode row counts.
+
+    On TPU the fused Pallas kernel is timed against the XLA two-GEMM
+    chain and the crossover (smallest M where the kernel wins) is
+    reported — that value belongs in REPRO_CUR_KERNEL_MIN_M. Off-TPU the
+    kernel only runs interpreted (pathological timings), so the sweep
+    times chain-vs-dense instead and reports no crossover."""
+    on_tpu = jax.default_backend() == "tpu"
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    cu = jax.random.normal(ks[1], (m, r), jnp.float32)
+    R = jax.random.normal(ks[2], (r, n), jnp.float32)
+    W = cu @ R
+    chain = jax.jit(cur_matmul_ref)
+    dense = jax.jit(lambda x, W: x @ W)
+    kern = None
+    if on_tpu:
+        from repro.kernels.cur_matmul.ops import cur_matmul_op
+        kern = cur_matmul_op
+    rows, sweep, crossover = [], [], None
+    for M in SKINNY_MS:
+        x = jax.random.normal(ks[0], (M, m), jnp.float32)
+        t_chain = time_call(chain, x, cu, R)
+        t_dense = time_call(dense, x, W)
+        entry = {"M": M, "chain_us": t_chain * 1e6,
+                 "dense_us": t_dense * 1e6}
+        derived = f"vs_dense={t_dense/t_chain:.2f}x"
+        if kern is not None:
+            t_kern = time_call(kern, x, cu, R)
+            entry["kernel_us"] = t_kern * 1e6
+            derived += f" vs_kernel={t_kern/t_chain:.2f}x"
+            if crossover is None and t_kern < t_chain:
+                crossover = M
+        sweep.append(entry)
+        rows.append((f"kernel/cur_skinny_M{M}", t_chain * 1e6, derived))
+    rows.append(("kernel/cur_kernel_crossover_m", 0.0,
+                 f"min_m={crossover if crossover is not None else 'n/a'}"
+                 f" backend={jax.default_backend()}"))
+    return rows, {"sweep": sweep, "crossover_m": crossover,
+                  "backend": jax.default_backend(),
+                  "shape": {"m": m, "n": n, "r": r}}
+
 
 def run(quick=True):
+    rows, _ = _bench(quick)
+    return rows
+
+
+def _bench(quick=True):
     rows = []
     M, m, n, r = (1024, 512, 1408, 64) if quick else (4096, 1024, 2816, 128)
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -37,6 +96,11 @@ def run(quick=True):
     rows.append((f"kernel/cur_folded_r{r}", t_f * 1e6,
                  f"speedup={t_d/t_f:.2f}x flop_ratio={fl_d/fl_f:.1f}x"))
 
+    # skinny decode GEMVs: the apply_w auto-gate crossover calibration
+    sk_rows, sk_json = skinny_sweep(*((256, 512, 32) if quick
+                                      else (1024, 2816, 128)))
+    rows += sk_rows
+
     # attention: dense-masked vs interpret-mode Pallas is meaningless on
     # CPU; compare dense vs chunked-flash jnp paths instead
     B, H, K, S, d = (1, 4, 2, 512, 64) if quick else (2, 8, 4, 1024, 64)
@@ -46,9 +110,21 @@ def run(quick=True):
     t_ref = time_call(jax.jit(flash_attention_ref), q, k, v)
     rows.append((f"kernel/attention_ref_S{S}", t_ref * 1e6,
                  f"gflop={4*B*H*S*S*d/1e9:.2f}"))
-    return rows
+    return rows, {"skinny": sk_json}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
+    rows, results = _bench(quick=not args.full)
+    print("name,us_per_call,derived")
+    emit(rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
 
 
 if __name__ == "__main__":
-    from benchmarks.common import emit
-    emit(run(quick=False))
+    main()

@@ -12,7 +12,12 @@ prompts, per-request generation budgets):
 
 Useful-token throughput: every request counts only its own requested
 budget (the static path keeps decoding retired sequences — that waste is
-the point). Arrival mixes: burst (pure throughput) and staggered.
+the point). Arrival mixes: burst (pure throughput) and staggered. The
+JSON also splits phases (`decode_tok_s`, `prefill_time_s`,
+`gathered_bytes_per_step`) and runs a zoo-config long-decode scenario
+(`zoo_decode_tok_s`, C=8, L ~ 400, CUR-KV half rank) — the trajectory
+metric for the rank-space attention fold / paged-kernel gather
+elimination.
 
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke [--out f.json]
 """
@@ -30,6 +35,7 @@ from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
 from repro.launch.serve import make_workload
 from repro.launch.serve import run_continuous as drive_server
+from repro.kernels.paged_attention import use_paged_kernel
 from repro.models import init_params
 from repro.serve.engine import generate
 from repro.serving import PagedConfig, Server
@@ -38,10 +44,10 @@ ARCH = "olmo-1b"
 
 
 def build_workload(n: int, vocab: int, *, spacing_s: float = 0.0,
-                   seed: int = 0):
-    """The launch CLI's mixed workload (ragged prompts, 4..32 budgets);
-    burst arrivals by default."""
-    return make_workload(n, vocab, max_new=32, seed=seed,
+                   seed: int = 0, max_new: int = 32):
+    """The launch CLI's mixed workload (ragged prompts, 4..max_new
+    budgets); burst arrivals by default."""
+    return make_workload(n, vocab, max_new=max_new, seed=seed,
                          arrival_spacing_s=spacing_s)
 
 
@@ -79,6 +85,13 @@ def run_continuous(params, cfg, workload, C: int, pc: PagedConfig,
             "useful_tokens": st["tokens_generated"],
             "tokens_per_s": st["tokens_per_s"],
             "ttft_mean_s": st["ttft_mean_s"],
+            # phase split: prefill cost shows up as TTFT, decode-phase
+            # tok/s isolates the per-step hot path (the gather/
+            # reconstruct elimination target)
+            "prefill_time_s": st["prefill_time_s"],
+            "decode_time_s": st["decode_time_s"],
+            "decode_tok_s": st["decode_tok_s"],
+            "gathered_bytes_per_step": st["gathered_bytes_per_step"],
             "n_preemptions": st["n_preemptions"],
             "cache_bytes": st["cache_bytes"]}
 
@@ -141,18 +154,52 @@ def _bench(quick: bool = True):
                            _paged_config(stag_wl, C))]
     results["scenarios"].append({"mix": "staggered-10ms", "runs": stag})
 
+    # zoo-config long-decode scenario: the rank-space-fold acceptance
+    # metric. At L ~ 400 the per-step KV read dominates the decode cost,
+    # so eliminating the full-head-dim reconstruct (and, on the kernel
+    # path, the gather itself) is what this number tracks. CUR-KV at
+    # half rank; random init — throughput is weight-value-independent,
+    # so the serving job does not need the trained zoo checkpoint.
+    from repro.configs import get_repro
+    zcfg = get_repro()
+    zparams = init_params(jax.random.PRNGKey(1), zcfg)
+    zwl = build_workload(16, zcfg.vocab_size, max_new=352)
+    zpc = _paged_config(zwl, C, cur_kv=True,
+                        kv_rank=max(1, zcfg.resolved_head_dim // 2))
+    zfn = lambda: run_continuous(zparams, zcfg, zwl, C, zpc,
+                                 label="zoo+cur-kv")
+    zfn()
+    zoo = sorted((zfn() for _ in range(3)),
+                 key=lambda r: r["decode_tok_s"])[1]
+    results["scenarios"].append({"mix": "zoo-long-decode", "runs": [zoo]})
+    results["zoo_decode_tok_s"] = zoo["decode_tok_s"]
+
     static_tps = burst[0]["tokens_per_s"]
     cont_tps = burst[1]["tokens_per_s"]
     speedup = cont_tps / static_tps
     kv_ratio = burst[3]["cache_bytes"] / burst[1]["cache_bytes"]
     results["speedup_continuous_vs_static"] = speedup
     results["curkv_cache_byte_ratio"] = kv_ratio
+    # decode-phase split (median-of-3 run): the trajectory metric for the
+    # rank-space fold / paged-kernel gather elimination
+    results["decode_tok_s"] = {r["engine"]: r["decode_tok_s"]
+                               for r in burst[1:] + [zoo]}
+    results["gathered_bytes_per_step"] = {
+        r["engine"]: r["gathered_bytes_per_step"]
+        for r in burst[1:] + [zoo]}
+    results["paged_kernel"] = use_paged_kernel()
 
     rows = []
     for r in burst:
         rows.append((f"serving/{r['engine']}",
                      1e6 * r["elapsed_s"] / r["useful_tokens"],
                      f"{r['tokens_per_s']:.1f}tok/s"))
+    for r in burst[1:] + [zoo]:
+        rows.append((f"serving/decode/{r['engine']}",
+                     (1e6 * r["decode_time_s"] /
+                      max(1, r["useful_tokens"])),
+                     f"{r['decode_tok_s']:.1f}tok/s "
+                     f"gather={r['gathered_bytes_per_step']/2**10:.0f}KiB"))
     rows.append(("serving/staggered_continuous",
                  1e6 * stag[0]["elapsed_s"] / stag[0]["useful_tokens"],
                  f"ttft={stag[0]['ttft_mean_s']*1e3:.0f}ms"))

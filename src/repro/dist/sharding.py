@@ -301,36 +301,53 @@ def cache_pspecs(cache, cfg: ModelConfig, shape: ShapeConfig, mesh):
                  lambda path, leaf: _cache_leaf_spec(path, leaf, cfg, mesh))
 
 
-def _paged_leaf_spec(path, leaf, cfg: ModelConfig, mesh):
+def _paged_leaf_spec(path, leaf, cfg: ModelConfig, mesh,
+                     kernel: bool = False):
     """Paged-pool leaves. Pools (L, n_blocks, bs, K, r): blocks are shared
     by all sequences, so there is no batch axis — one axis shards over
     'model' by first-divisible priority (kv-heads, then feature/rank,
     then the block pool). CUR-KV projections and block tables replicate
-    (tiny / host-managed)."""
+    (tiny / host-managed).
+
+    ``kernel=True`` (the ``REPRO_PAGED_KERNEL`` Pallas decode path): the
+    kernel grids over (slot, kv-head, block) and holds a whole
+    ``(block_size, r)`` tile per step, so kv-heads is the ONLY pool axis
+    it can shard — the rank/block-pool fallbacks would split in-kernel
+    tiles. Non-divisible kv-heads replicate instead of falling back."""
     shape = tuple(leaf.shape)
     key = path[-1] if path and isinstance(path[-1], str) else None
     if key in ("k", "v") and len(shape) == 5:   # (L, nb, bs, K, r)
-        for cand in ([None, None, None, "model", None],
-                     [None, None, None, None, "model"],
-                     [None, "model", None, None, None]):
+        cands = [[None, None, None, "model", None]]
+        if not kernel:
+            cands += [[None, None, None, None, "model"],
+                      [None, "model", None, None, None]]
+        for cand in cands:
             spec = _guard(shape, cand, mesh)
             if spec is not None and any(a == "model" for a in tuple(spec)):
                 return spec
     return None
 
 
-def paged_cache_pspecs(cache, cfg: ModelConfig, mesh):
-    """Specs for a ``repro.serving.paged_cache`` pool pytree."""
+def paged_cache_pspecs(cache, cfg: ModelConfig, mesh, kernel: bool = False):
+    """Specs for a ``repro.serving.paged_cache`` pool pytree. Pass
+    ``kernel=True`` when the decode step dispatches to the paged-attention
+    Pallas kernel (kv-head-only pool sharding; see ``_paged_leaf_spec``)."""
     return _walk(cache, (),
-                 lambda path, leaf: _paged_leaf_spec(path, leaf, cfg, mesh))
+                 lambda path, leaf: _paged_leaf_spec(path, leaf, cfg, mesh,
+                                                     kernel))
 
 
-def paged_decode_pspecs(cfg: ModelConfig, batch: int, max_blocks: int, mesh):
+def paged_decode_pspecs(cfg: ModelConfig, batch: int, max_blocks: int, mesh,
+                        kernel: bool = False):
     """(tokens, table, ctx_len, active) specs for one paged decode step:
     every slot-batch-dim input — including each slot's block-table row —
     shards over ('pod',)'data'; the pool itself has no data-axis sharding
     (see ``paged_cache_pspecs``), so each shard gathers its slots' blocks
-    from the shared pool."""
+    from the shared pool. ``kernel=True`` matches ``paged_cache_pspecs``:
+    the batch-dim inputs are identical on both paths (the kernel's
+    scalar-prefetched table/ctx rows follow their slots over 'data'
+    while kv-heads shard over 'model' exactly like the einsum path)."""
+    del kernel  # same input layout on both paths; kwarg kept for parity
     dp = _dp_axes(mesh)
     tokens = _guard((batch, 1), [dp, None], mesh)
     table = _guard((batch, max_blocks), [dp, None], mesh)

@@ -1,0 +1,6 @@
+from repro.kernels.paged_attention.ops import (
+    fold_q, paged_attention_op, paged_attention_ref, paged_kernel_mode,
+    unfold_o, use_paged_kernel)
+
+__all__ = ["fold_q", "paged_attention_op", "paged_attention_ref",
+           "paged_kernel_mode", "unfold_o", "use_paged_kernel"]

@@ -1,0 +1,146 @@
+"""Paged-attention decode Pallas TPU kernel: block-table KV reads, online
+softmax, rank-space CUR-KV.
+
+One query token per slot attends to its paged KV history *in place*: the
+grid is (B, K, maxb) with the per-sequence block index innermost, and a
+scalar-prefetched block table drives the K/V BlockSpec index maps — each
+grid step DMAs exactly one ``(block_size, r)`` pool block into VMEM, so
+the full ``(B, maxb*bs, K, r)`` gather (and, in CUR-KV mode, the fp32
+``(.., head_dim)`` reconstruction) that the XLA path materializes in HBM
+never exists. Per-(slot, kv-head) running (max, sum, acc) f32 scratch
+implements the online softmax across blocks, exactly like
+``flash_attention``'s KV-tile loop.
+
+CUR-KV attention happens natively in rank space: the caller folds the key
+link matrix into the query (``q̃ = scale * q @ Ukᵀ``, see ``ref.fold_q``)
+so scores are taken directly against the stored r-dim keys, and applies
+the value link matrix to the r-dim output afterwards
+(``o = (p @ v_r) @ Uv``) — algebra identical to reconstructing
+``k̂ = k_r @ Uk`` / ``v̂ = v_r @ Uv``, with no full-head-dim intermediate
+on any path. Dense pools are the ``r == head_dim`` special case (no
+folds), so one kernel serves both modes.
+
+Masking is in-kernel: token index ``t`` is live iff ``t <= ctx_len[b]``
+(the newest token was just written at ``ctx_len[b]``), inside the local
+window when ``window > 0``, and its table entry is assigned (>= 0).
+Entirely-dead blocks — unassigned table entries, blocks past the context,
+blocks before the window — are skipped with ``pl.when`` so their DMA'd
+tile never touches the MXU. Slots with no live position (inactive rows
+with an all-``-1`` table row) produce exact zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs, nb, window):
+    b = pl.program_id(0)
+    j = pl.program_id(2)          # per-sequence block index (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+    start = j * bs
+    # block is live unless unassigned, entirely past the context, or
+    # entirely before the sliding window
+    live = jnp.logical_and(tbl_ref[b, j] >= 0, start <= ctx)
+    if window > 0:
+        live = jnp.logical_and(live, start + bs - 1 > ctx - window)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, 0]                          # (G, r), pre-scaled/folded
+        k = k_ref[0, :, 0]                       # (bs, r)
+        v = v_ref[0, :, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (G, bs)
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = idx <= ctx
+        if window > 0:
+            mask = jnp.logical_and(mask, idx > ctx - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        # l == 0 (no live block anywhere, e.g. an inactive slot with an
+        # all-unassigned table row): acc is zero -> exact zero output
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pool, v_pool, table, ctx_len, *, window: int = 0,
+                    interpret: bool = False):
+    """q (B, K, G, r) folded/pre-scaled queries; k/v_pool
+    (n_blocks, bs, K, r); table (B, maxb) int32 (-1 = unassigned);
+    ctx_len (B,) newest-token index. Returns (B, K, G, r) rank-space
+    attention outputs (apply ``Uv`` outside for CUR-KV pools)."""
+    B, K, G, r = q.shape
+    nb_pool, bs, Kp, rp = k_pool.shape
+    if (Kp, rp) != (K, r) or v_pool.shape != k_pool.shape:
+        raise ValueError(
+            f"pool/query mismatch: q {q.shape}, k_pool {k_pool.shape}, "
+            f"v_pool {v_pool.shape}")
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("paged_attention needs pallas.tpu "
+                           "(PrefetchScalarGridSpec)")
+    maxb = table.shape[1]
+    kernel = functools.partial(_kernel, bs=bs, nb=maxb, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, maxb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, r),
+                         lambda b, k, j, tbl, ctx: (b, k, 0, 0)),
+            # the block table IS the index map: unassigned entries clamp
+            # to block 0 (their tile is DMA'd but pl.when-skipped)
+            pl.BlockSpec((1, bs, 1, r),
+                         lambda b, k, j, tbl, ctx:
+                         (jnp.maximum(tbl[b, j], 0), 0, k, 0)),
+            pl.BlockSpec((1, bs, 1, r),
+                         lambda b, k, j, tbl, ctx:
+                         (jnp.maximum(tbl[b, j], 0), 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, r),
+                               lambda b, k, j, tbl, ctx: (b, k, 0, 0)),
+        scratch_shapes=[
+            _VMEM((G, 1), jnp.float32),
+            _VMEM((G, 1), jnp.float32),
+            _VMEM((G, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, r), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), ctx_len.astype(jnp.int32), q,
+      k_pool, v_pool)

@@ -56,7 +56,7 @@ def _scalable_reps(cfg) -> int:
 
 
 def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int,
-                  paged: bool = False):
+                  paged: bool = False, paged_kernel: bool = True):
     """Lower + compile one artifact. Returns (compiled, lower_s,
     compile_s)."""
     params = sp.param_specs(cfg)
@@ -69,13 +69,21 @@ def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int,
     if paged and shape.kind == "decode":
         from repro.serving import runtime as srt
         srt.check_supported(cfg)
+        # validate the sharding contract of the path production will run
+        # (TPU auto-resolves the kernel on): kv-head-pinned pool specs by
+        # default, NOT whatever use_paged_kernel() says on this dev host —
+        # the traced body still follows the host gate (the Pallas call
+        # does not lower under GSPMD on a fake mesh); specs are what the
+        # dry-run contract checks. --paged-einsum-specs flips it.
+        kern = paged_kernel
         cache, pc = sp.paged_cache_specs(cfg, shape)
-        c_specs = shd.paged_cache_pspecs(cache, cfg, mesh)
+        c_specs = shd.paged_cache_pspecs(cache, cfg, mesh, kernel=kern)
         c_sh = _named(c_specs, mesh)
         tokens, table, ctx, active = sp.paged_decode_input_specs(
             cfg, shape, pc)
         in_specs = shd.paged_decode_pspecs(
-            cfg, shape.global_batch, pc.max_blocks_per_seq, mesh)
+            cfg, shape.global_batch, pc.max_blocks_per_seq, mesh,
+            kernel=kern)
         in_sh = tuple(_named(s, mesh) for s in in_specs)
 
         def paged_step(params, tokens, cache, table, ctx, active):
@@ -157,7 +165,8 @@ def _cost_triple(compiled):
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                cur: bool = False, microbatch: int = 0, paged: bool = False,
-               verbose: bool = True, extrapolate: bool = True):
+               paged_kernel: bool = True, verbose: bool = True,
+               extrapolate: bool = True):
     """Lower + compile one (arch, shape, mesh) cell.
 
     XLA's cost_analysis counts while-loop bodies once, so the scanned
@@ -191,7 +200,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     chips = mesh.devices.size
 
     compiled, t_lower, t_compile = _compile_cell(
-        cfg, shape, mesh, cur=cur, microbatch=microbatch, paged=paged)
+        cfg, shape, mesh, cur=cur, microbatch=microbatch, paged=paged,
+        paged_kernel=paged_kernel)
     mem = compiled.memory_analysis()
     raw_flops, raw_bytes, raw_ess, raw_coll = _cost_triple(compiled)
 
@@ -199,11 +209,11 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if extrapolate and R > 1:
         c1, _, t1 = _compile_cell(_reduced_cfg(cfg, 1), shape, mesh,
                                   cur=cur, microbatch=microbatch,
-                                  paged=paged)
+                                  paged=paged, paged_kernel=paged_kernel)
         f1, b1, e1, coll1 = _cost_triple(c1)
         c2, _, t2 = _compile_cell(_reduced_cfg(cfg, 2), shape, mesh,
                                   cur=cur, microbatch=microbatch,
-                                  paged=paged)
+                                  paged=paged, paged_kernel=paged_kernel)
         f2, b2, e2, coll2 = _cost_triple(c2)
 
         def _extrap(x1, x2):
@@ -301,6 +311,10 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="decode shapes: compile the repro.serving paged "
                          "block-table runtime instead of the dense cache")
+    ap.add_argument("--paged-einsum-specs", action="store_true",
+                    help="with --paged: validate the einsum-path pool "
+                         "sharding (rank/block-axis fallbacks) instead of "
+                         "the default kernel-path kv-head-pinned specs")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--no-extrapolate", action="store_true",
                     help="single compile per cell (multi-pod pass: proves "
@@ -324,6 +338,7 @@ def main():
                     r = lower_cell(arch, shape, multi_pod=mp, cur=args.cur,
                                    microbatch=args.microbatch,
                                    paged=args.paged,
+                                   paged_kernel=not args.paged_einsum_specs,
                                    extrapolate=not args.no_extrapolate)
                 except Exception as e:  # noqa: BLE001 — record & continue
                     traceback.print_exc()

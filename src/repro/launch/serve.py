@@ -2,14 +2,18 @@
 CUR-compressed) model with a paged, optionally CUR-compressed KV cache.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-      --max-concurrency 8 [--cur-layers 2] [--cur-kv] [--block-size 16]
+      --max-concurrency 8 [--cur-layers 2] [--cur-kv] [--block-size 16] \
+      [--paged-kernel auto|on|off]
 
 ``--smoke`` drives a mixed workload — ragged prompt lengths, staggered
 arrivals, per-request generation budgets — through the
 ``repro.serving.Server``. ``--legacy`` (or a non-attention arch, e.g.
 mamba) falls back to the static-batch ``serve.engine.generate`` path.
+``--paged-kernel`` sets REPRO_PAGED_KERNEL (the block-table Pallas
+decode-attention kernel; auto = TPU only) before the server compiles.
 """
 import argparse
+import os
 import time
 
 import jax
@@ -74,6 +78,9 @@ def run_continuous(server: Server, workload, *, temperature: float = 0.0,
               f"steps prefill={stats['n_prefill_steps']} "
               f"decode={stats['n_decode_steps']} "
               f"preempt={stats['n_preemptions']}")
+        print(f"decode phase: {stats['decode_tok_s']:.1f} tok/s "
+              f"({stats['decode_time_s']:.2f}s) | gather "
+              f"{stats['gathered_bytes_per_step']/2**10:.1f} KiB/step")
         print(f"kv cache: {stats['cache_bytes']/2**20:.2f} MiB")
     return server.finished, stats
 
@@ -96,10 +103,19 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--max-concurrency", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged-kernel", default=None,
+                    choices=["auto", "on", "off"],
+                    help="REPRO_PAGED_KERNEL: block-table Pallas decode "
+                         "attention (auto: TPU only; on forces interpret "
+                         "mode off-TPU). Unset: an exported "
+                         "REPRO_PAGED_KERNEL is honored as-is")
     ap.add_argument("--legacy", action="store_true",
                     help="seed static-batch engine instead of the "
                          "continuous-batching runtime")
     args = ap.parse_args()
+    if args.paged_kernel is not None:
+        os.environ["REPRO_PAGED_KERNEL"] = {
+            "auto": "auto", "on": "1", "off": "0"}[args.paged_kernel]
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.input_mode != "tokens":
@@ -147,9 +163,11 @@ def main():
         cur_kv=args.cur_kv, kv_rank=kv_rank)
     server = Server(params, cfg, pc,
                     max_concurrency=args.max_concurrency)
+    from repro.serving.runtime import use_paged_kernel
     print(f"serving {args.n_requests} requests "
           f"(concurrency {args.max_concurrency}, block {args.block_size}, "
-          f"pool {pc.n_blocks} blocks, cur_kv={args.cur_kv})")
+          f"pool {pc.n_blocks} blocks, cur_kv={args.cur_kv}, "
+          f"paged_kernel={'on' if use_paged_kernel() else 'off'})")
     finished, _ = run_continuous(server, workload,
                                  temperature=args.temperature)
     first = finished[min(finished)]

@@ -34,19 +34,37 @@ def is_cur(w) -> bool:
 # forces the kernel (interpret mode off-TPU — used by the parity tests);
 # "0" forces the plain two-GEMM chain.
 _CUR_KERNEL_ENV = "REPRO_CUR_KERNEL"
+# REPRO_CUR_KERNEL_MIN_M: auto-gate crossover on the GEMM row count M
+# (= flattened batch of the activation). Decode calls apply_w with
+# M = concurrency (small, ragged) where the VMEM-fusion win loses to the
+# kernel's fixed dispatch/padding cost; `benchmarks.bench_kernels` sweeps
+# the skinny-GEMV sizes and reports the measured crossover for the
+# running backend — set this env to that value in deployment instead of
+# trusting the built-in default.
+_CUR_KERNEL_MIN_M_ENV = "REPRO_CUR_KERNEL_MIN_M"
+_CUR_KERNEL_MIN_M_DEFAULT = 32
 
 
-def use_cur_kernel(m: int, rk: int, n: int) -> bool:
+def cur_kernel_min_m() -> int:
+    return int(os.environ.get(_CUR_KERNEL_MIN_M_ENV,
+                              _CUR_KERNEL_MIN_M_DEFAULT))
+
+
+def use_cur_kernel(m: int, rk: int, n: int, M: Optional[int] = None) -> bool:
     """Trace-time gate for dispatching a folded CUR matmul to the fused
     ``cur_matmul`` Pallas kernel (which keeps the (M, r) intermediate in
-    VMEM instead of round-tripping it through HBM)."""
+    VMEM instead of round-tripping it through HBM). ``M`` is the
+    activation row count (None: weight-shape-only check, assumed large)."""
     mode = os.environ.get(_CUR_KERNEL_ENV, "auto")
     if mode == "0":
         return False
     if mode == "1":
         return True
-    # the VMEM-residency win needs MXU-scale operands; tiny smoke shapes
-    # and non-TPU backends (interpret mode) stay on the jnp chain
+    # the VMEM-residency win needs MXU-scale operands; tiny smoke shapes,
+    # skinny decode batches (M below the bench-measured crossover), and
+    # non-TPU backends (interpret mode) stay on the jnp chain
+    if M is not None and M < cur_kernel_min_m():
+        return False
     return (jax.default_backend() == "tpu"
             and m >= 128 and n >= 128 and rk >= 16
             and m % 8 == 0 and n % 8 == 0)
@@ -96,7 +114,8 @@ def apply_w(x: jnp.ndarray, w) -> jnp.ndarray:
         return x @ w
     if "CU" in w:
         cu, r = w["CU"], w["R"]
-        if use_cur_kernel(cu.shape[0], cu.shape[1], r.shape[1]):
+        M = math.prod(x.shape[:-1])         # static at trace time
+        if use_cur_kernel(cu.shape[0], cu.shape[1], r.shape[1], M):
             from repro.kernels.cur_matmul.ops import cur_matmul_op
             return cur_matmul_op(x, cu.astype(x.dtype), r.astype(x.dtype))
         return (x @ cu) @ r

@@ -8,6 +8,19 @@ continuous-batching scheduler feeds them never change mid-run. Ragged
 prompt batches are padded up to power-of-two buckets, which keeps the
 folded-CUR weight matmuls on the ``cur_matmul`` pad-and-slice fast path
 (MXU-aligned block sizes regardless of admitted batch raggedness).
+
+Decode attention runs in **rank space** (CURing's approximate-via-
+selected-columns framing; Sengupta et al. 2025): the key link matrix is
+folded into the query (``q̃ = scale * q @ Ukᵀ``) so scores are taken
+directly against the stored r-dim keys, and the value link matrix is
+applied after the softmax (``o = (p @ v_r) @ Uv``) — the CUR-compressed
+cache is never re-expanded to full head_dim on any backend. Behind
+``REPRO_PAGED_KERNEL`` (auto = TPU) the per-step attention dispatches to
+the ``kernels.paged_attention`` Pallas kernel, which reads pool blocks
+through the block table in-kernel — no ``gather_kv`` materialization at
+all; the XLA fallback keeps the gather but the same rank-space algebra.
+Both paths are scan-safe (no host syncs), so ``paged_decode_scan``
+multi-step windows work with the kernel gated either way.
 """
 from __future__ import annotations
 
@@ -17,6 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ATTN, ATTN_LOCAL, MLP, MOE, ModelConfig
+from repro.kernels.paged_attention import (
+    fold_q, paged_attention_op, paged_attention_ref, unfold_o,
+    use_paged_kernel)
 from repro.models import attention as attn
 from repro.models.layers import apply_w, norm
 from repro.models.mlp import mlp_forward
@@ -24,7 +40,47 @@ from repro.models.model import _embed, _unembed
 from repro.models.moe import moe_forward
 from repro.serving import paged_cache as pcache
 
-NEG_INF = attn.NEG_INF
+
+def _paged_attn(qg, k_pool, v_pool, table, ctx_len, uk, uv, scale,
+                window: int, kernel=None):
+    """Rank-space paged attention for one layer's single-token queries.
+
+    qg (B, K, G, hd) grouped queries; pools (n_blocks, bs, K, r).
+    Returns (B, K, G, hd) — rank-space scores/values with the Uk/Uv
+    folds, on the Pallas block-table kernel when gated on, else the
+    gather-based XLA reference (same math, same masking). ``kernel``
+    pins the dispatch explicitly (the Server resolves the env gate ONCE
+    and threads it here, so a mid-session env flip cannot make a lazily
+    traced step disagree with its jit-cache key); None re-reads the env
+    at trace time."""
+    if kernel is None:
+        kernel = use_paged_kernel()
+    qf = fold_q(qg, uk, scale)                    # (B, K, G, r)
+    if kernel:
+        o_r = paged_attention_op(qf, k_pool, v_pool, table, ctx_len,
+                                 window=window)
+    else:
+        o_r = paged_attention_ref(qf, k_pool, v_pool, table, ctx_len,
+                                  window=window)
+    return unfold_o(o_r, uv)                      # (B, K, G, hd)
+
+
+def gathered_bytes_per_step(cfg: ModelConfig, pc: pcache.PagedConfig,
+                            batch: int, kernel=None) -> int:
+    """HBM bytes the decode step materializes out of the pool per engine
+    step (the ``gather_kv`` cost the kernel path eliminates): 0 when the
+    Pallas kernel is gated on, else k+v gathers of the full table window
+    for every attention layer. Pass ``kernel`` to describe a specific
+    compiled path (the Server pins it at construction) instead of the
+    env var's current resolution."""
+    if kernel is None:
+        kernel = use_paged_kernel()
+    if kernel:
+        return 0
+    L = pcache._attn_layers(cfg)
+    r = pc.rank(cfg.resolved_head_dim)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return 2 * L * batch * pc.max_len * cfg.n_kv_heads * r * itemsize
 
 
 def iter_blocks(params, cfg: ModelConfig):
@@ -69,18 +125,29 @@ def _channel_mix(x, p, spec, cfg, mesh):
 
 def paged_prefill(params, cfg: ModelConfig, pc: pcache.PagedConfig,
                   tokens: jnp.ndarray, lengths: jnp.ndarray,
-                  cache: dict, table: jnp.ndarray, mesh=None):
+                  cache: dict, table: jnp.ndarray, mesh=None,
+                  kernel=None):
     """Process padded ragged prompts, writing roped K/V into the pool.
 
     tokens (B, S) right-padded; lengths (B,) true prompt lengths (0 =
     inactive slot); table (B, maxb) block ids (-1 pad). Returns
-    (last-real-token logits (B, V), new cache)."""
+    (last-real-token logits (B, V), new cache).
+
+    In CUR-KV mode the **last real position's** attention output is
+    recomputed through the pool (rank space — the Pallas kernel when
+    gated on, the XLA reference otherwise) and spliced in, so the token
+    sampled from the prefill logits sees exactly the compressed cache it
+    will be decoded against instead of the dense in-flight K/V. The
+    splice keys on ``cur_kv``, NOT on the kernel gate: the sampled
+    stream must not change between backends/gates, only the dispatch
+    may. Dense pools skip it (the splice is an algebraic no-op there)."""
     check_supported(cfg)
     x = _embed(params, cfg, {"tokens": tokens})
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
                                  (B, S))
     scale = cfg.resolved_head_dim ** -0.5
+    last = jnp.clip(lengths - 1, 0, S - 1)
     new_k, new_v = cache["k"], cache["v"]
     for li, spec, p in iter_blocks(params, cfg):
         win = cfg.window if spec.mixer == ATTN_LOCAL else 0
@@ -89,17 +156,26 @@ def paged_prefill(params, cfg: ModelConfig, pc: pcache.PagedConfig,
         qg = attn._group_q(q, cfg.n_kv_heads)
         o = attn._mix(qg, k, v, positions, win, scale, cfg)
         o = o.reshape(B, S, -1)
-        x = x + apply_w(o, p["wo"])
-        qk, _, qv, _ = _layer_proj(cache, li)
-        new_k = new_k.at[li].set(pcache.write_prompt(
+        qk, uk, qv, uv = _layer_proj(cache, li)
+        pool_k = pcache.write_prompt(
             new_k[li], pcache.compress_kv(k, qk), table, lengths,
-            pc.block_size))
-        new_v = new_v.at[li].set(pcache.write_prompt(
+            pc.block_size)
+        pool_v = pcache.write_prompt(
             new_v[li], pcache.compress_kv(v, qv), table, lengths,
-            pc.block_size))
+            pc.block_size)
+        new_k = new_k.at[li].set(pool_k)
+        new_v = new_v.at[li].set(pool_v)
+        if qk is not None:                        # CUR-KV pool
+            qg_last = jnp.take_along_axis(
+                qg, last[:, None, None, None, None], axis=1)[:, 0]
+            o_last = _paged_attn(qg_last, pool_k, pool_v, table, last,
+                                 uk, uv, scale, win,
+                                 kernel).reshape(B, 1, -1)
+            sel = (positions == last[:, None])[..., None]   # (B, S, 1)
+            o = jnp.where(sel, o_last, o)
+        x = x + apply_w(o, p["wo"])
         x = _channel_mix(x, p, spec, cfg, mesh)
     x = norm(x, params.get("final_norm"), cfg)
-    last = jnp.clip(lengths - 1, 0, S - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
     logits = _unembed(params, cfg, x_last)[:, 0, :]
     new_cache = dict(cache)
@@ -113,7 +189,8 @@ def paged_prefill(params, cfg: ModelConfig, pc: pcache.PagedConfig,
 
 def paged_decode(params, cfg: ModelConfig, pc: pcache.PagedConfig,
                  tokens: jnp.ndarray, cache: dict, table: jnp.ndarray,
-                 ctx_len: jnp.ndarray, active: jnp.ndarray, mesh=None):
+                 ctx_len: jnp.ndarray, active: jnp.ndarray, mesh=None,
+                 kernel=None):
     """One decode step for every active slot.
 
     tokens (B, 1) last sampled token per slot; ctx_len (B,) tokens already
@@ -124,31 +201,23 @@ def paged_decode(params, cfg: ModelConfig, pc: pcache.PagedConfig,
     B = x.shape[0]
     pos = ctx_len[:, None].astype(jnp.int32)              # (B, 1)
     scale = cfg.resolved_head_dim ** -0.5
-    L = table.shape[1] * pc.block_size
-    kv_idx = jnp.arange(L, dtype=jnp.int32)
     new_k, new_v = cache["k"], cache["v"]
     for li, spec, p in iter_blocks(params, cfg):
         win = cfg.window if spec.mixer == ATTN_LOCAL else 0
         h = norm(x, p.get("norm1"), cfg)
         q, k, v = attn.qkv_project(h, p, cfg, pos)        # (B, 1, ., hd)
         qk, uk, qv, uv = _layer_proj(cache, li)
-        new_k = new_k.at[li].set(pcache.write_token(
+        pool_k = pcache.write_token(
             new_k[li], pcache.compress_kv(k[:, 0], qk), table,
-            ctx_len, active, pc.block_size))
-        new_v = new_v.at[li].set(pcache.write_token(
+            ctx_len, active, pc.block_size)
+        pool_v = pcache.write_token(
             new_v[li], pcache.compress_kv(v[:, 0], qv), table,
-            ctx_len, active, pc.block_size))
-        ck = pcache.reconstruct_kv(pcache.gather_kv(new_k[li], table), uk)
-        cv = pcache.reconstruct_kv(pcache.gather_kv(new_v[li], table), uv)
-        qg = attn._group_q(q, cfg.n_kv_heads)             # (B, 1, K, G, hd)
-        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, ck).astype(jnp.float32)
-        s = s * scale
-        valid = kv_idx[None, :] <= ctx_len[:, None]       # includes new tok
-        if win > 0:
-            valid &= kv_idx[None, :] > (ctx_len[:, None] - win)
-        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
-        pr = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bkgqt,btkd->bqkgd", pr.astype(cv.dtype), cv)
+            ctx_len, active, pc.block_size)
+        new_k = new_k.at[li].set(pool_k)
+        new_v = new_v.at[li].set(pool_v)
+        qg = attn._group_q(q, cfg.n_kv_heads)[:, 0]       # (B, K, G, hd)
+        o = _paged_attn(qg, pool_k, pool_v, table, ctx_len, uk, uv,
+                        scale, win, kernel)
         o = o.reshape(B, 1, -1)
         x = x + apply_w(o, p["wo"])
         x = _channel_mix(x, p, spec, cfg, mesh)
@@ -166,7 +235,8 @@ def paged_decode(params, cfg: ModelConfig, pc: pcache.PagedConfig,
 def paged_decode_scan(params, cfg: ModelConfig, pc: pcache.PagedConfig,
                       tokens, cache, table, ctx, active, budgets,
                       base_keys, gen_starts, temps, top_ks, top_ps,
-                      n_steps: int, mesh=None, greedy: bool = False):
+                      n_steps: int, mesh=None, greedy: bool = False,
+                      kernel=None):
     """``n_steps`` decode+sample iterations in one compiled scan.
 
     Sampled tokens feed the next step on-device, so the host syncs once
@@ -190,7 +260,7 @@ def paged_decode_scan(params, cfg: ModelConfig, pc: pcache.PagedConfig,
         toks, c, cx = carry
         live = active & (gen_starts + i < budgets)
         logits, c = paged_decode(params, cfg, pc, toks, c, table, cx,
-                                 live, mesh)
+                                 live, mesh, kernel)
         lg32 = logits.astype(jnp.float32)
         if greedy:
             logp = jax.nn.log_softmax(lg32)

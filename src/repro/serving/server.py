@@ -33,22 +33,32 @@ def _bucket(n: int, lo: int, hi: int) -> int:
     return min(b, hi)
 
 
-# jit cache keyed by (cfg, pc, mesh): Server instances with the same
-# model/pool layout share compiled step functions, so a fresh Server
-# (benchmark reruns, worker restarts) never recompiles
+# jit cache keyed by (cfg, pc, mesh, paged-kernel gate): Server instances
+# with the same model/pool layout share compiled step functions, so a
+# fresh Server (benchmark reruns, worker restarts) never recompiles. The
+# REPRO_PAGED_KERNEL gate resolves at trace time inside the step bodies,
+# so its resolved value is part of the key — flipping the env var between
+# Server constructions compiles fresh steps instead of reusing stale ones
 _JIT_CACHE: dict = {}
 
 
 def _jitted_steps(cfg: ModelConfig, pc, mesh):
-    key = (cfg, pc, None if mesh is None else id(mesh))
+    # the gate is resolved HERE and closed over — jit traces lazily on
+    # first call, so re-reading the env inside the step body could
+    # disagree with the key if the var flips between construction and
+    # first request
+    kern = runtime.use_paged_kernel()
+    key = (cfg, pc, None if mesh is None else id(mesh), kern)
     if key not in _JIT_CACHE:
         def _prefill(params, tokens, lengths, cache, table):
             return runtime.paged_prefill(params, cfg, pc, tokens,
-                                         lengths, cache, table, mesh)
+                                         lengths, cache, table, mesh,
+                                         kernel=kern)
 
         def _decode(params, tokens, cache, table, ctx, active):
             return runtime.paged_decode(params, cfg, pc, tokens, cache,
-                                        table, ctx, active, mesh)
+                                        table, ctx, active, mesh,
+                                        kernel=kern)
 
         def _decode_scan(params, tokens, cache, table, ctx, active,
                          budgets, base_keys, gen_starts, temps, top_ks,
@@ -56,7 +66,7 @@ def _jitted_steps(cfg: ModelConfig, pc, mesh):
             return runtime.paged_decode_scan(
                 params, cfg, pc, tokens, cache, table, ctx, active,
                 budgets, base_keys, gen_starts, temps, top_ks, top_ps,
-                n_steps, mesh, greedy=greedy)
+                n_steps, mesh, greedy=greedy, kernel=kern)
 
         # the cache pytree is donated: pool updates alias in place instead
         # of copying the full KV pool every step
@@ -88,6 +98,9 @@ class Server:
             self.cache = runtime.calibrate_kv(
                 params, cfg, self.pc, self.cache, calib_tokens)
 
+        # resolved once, alongside the jit key: stats must describe the
+        # path THIS server compiled, not the env var's current value
+        self._paged_kernel = runtime.use_paged_kernel()
         self._prefill, self._decode, self._decode_scan = _jitted_steps(
             cfg, self.pc, mesh)
         self.max_decode_window = max_decode_window
@@ -103,6 +116,13 @@ class Server:
         self.n_prefill_steps = 0
         self.n_decode_steps = 0
         self.queue_depth_samples: List[int] = []
+        # phase split: prefill cost is TTFT-bound, decode cost is the
+        # steady-state throughput — reported separately so gather-
+        # elimination in the decode hot path is visible in the artifact
+        self.prefill_time_s = 0.0
+        self.decode_time_s = 0.0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
 
     # -- request lifecycle ---------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -320,10 +340,15 @@ class Server:
             self._t_start = now
         self.queue_depth_samples.append(self.scheduler.queue_depth)
         plan = self.scheduler.plan()
+        toks_before = self.tokens_generated
         if plan.kind == "prefill":
             self._run_prefill(plan.prefill, now)
+            self.prefill_time_s += time.perf_counter() - now
+            self.prefill_tokens += self.tokens_generated - toks_before
         elif plan.kind == "decode":
             self._run_decode(now)
+            self.decode_time_s += time.perf_counter() - now
+            self.decode_tokens += self.tokens_generated - toks_before
         else:
             return False
         return True
@@ -359,4 +384,11 @@ class Server:
             "n_decode_steps": self.n_decode_steps,
             "n_preemptions": self.scheduler.n_preemptions,
             "cache_bytes": self.cache_bytes(),
+            "prefill_time_s": self.prefill_time_s,
+            "decode_time_s": self.decode_time_s,
+            "decode_tok_s": (self.decode_tokens / self.decode_time_s
+                             if self.decode_time_s > 0 else 0.0),
+            "gathered_bytes_per_step": runtime.gathered_bytes_per_step(
+                self.cfg, self.pc, self.scheduler.max_concurrency,
+                kernel=self._paged_kernel),
         }

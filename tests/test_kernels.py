@@ -143,6 +143,24 @@ def test_apply_w_dispatches_to_cur_kernel(monkeypatch):
     assert not layers.use_cur_kernel(256, 64, 512)
 
 
+def test_use_cur_kernel_skinny_m_gate(monkeypatch):
+    """Satellite: the auto gate considers the activation row count M —
+    skinny decode batches (M = concurrency) fall back to XLA below the
+    REPRO_CUR_KERNEL_MIN_M crossover even on MXU-worthy weight shapes."""
+    from repro.models import layers
+
+    monkeypatch.setattr(layers.jax, "default_backend", lambda: "tpu")
+    monkeypatch.delenv("REPRO_CUR_KERNEL", raising=False)
+    assert layers.use_cur_kernel(256, 64, 512)            # M unknown
+    assert layers.use_cur_kernel(256, 64, 512, M=1024)    # prefill-scale
+    assert not layers.use_cur_kernel(256, 64, 512, M=8)   # decode batch
+    # the crossover is deployment-tunable from the bench_kernels sweep
+    monkeypatch.setenv("REPRO_CUR_KERNEL_MIN_M", "4")
+    assert layers.use_cur_kernel(256, 64, 512, M=8)
+    monkeypatch.setenv("REPRO_CUR_KERNEL", "1")           # force wins
+    assert layers.use_cur_kernel(256, 64, 512, M=1)
+
+
 def test_flash_matches_model_attention_path():
     """Kernel agrees with the model's chunked-jnp attention (the dry-run
     lowering basis) — same math, two implementations."""

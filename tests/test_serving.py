@@ -178,8 +178,10 @@ def test_cur_kv_full_rank_exact(olmo, prompts):
 
 
 def test_cur_kv_compressed_bytes_and_finite(olmo, prompts):
-    """r == head_dim // 2: half the cache bytes; decode stays finite and
-    the prefill-sampled first token (dense attention path) is unchanged."""
+    """r == head_dim // 2: half the cache bytes; decode stays finite.
+    The first token is sampled against the *compressed* pool (the
+    prefill last-position splice — consistent with every decode step
+    that follows), so it may legitimately differ from the dense run."""
     cfg, params = olmo
     hd = cfg.resolved_head_dim
     dense = PagedConfig(block_size=8, n_blocks=64, max_blocks_per_seq=8)
@@ -189,10 +191,72 @@ def test_cur_kv_compressed_bytes_and_finite(olmo, prompts):
     out, s1 = _run(params, cfg, half, prompts)
     assert s1.cache_bytes() * 2 == s0.cache_bytes()
     for i in ref:
-        assert out[i][0] == ref[i][0]
         assert all(0 <= t < cfg.vocab_size for t in out[i])
     lps = [lp for r in s1.finished.values() for lp in r.out_logprobs]
     assert np.isfinite(lps).all()
+
+
+@pytest.mark.parametrize("rank_div", [1, 2])     # r == hd, r == hd/2
+def test_decode_fold_matches_old_reconstruct_path(olmo, rank_div):
+    """The rank-space decode (q̃ = scale·q·Ukᵀ, post-softmax ·Uv) is
+    bit-close to the pre-fold formulation that gathered the pool and
+    reconstructed full-head-dim K/V before a dense einsum."""
+    from repro.serving import runtime
+
+    cfg, params = olmo
+    hd = cfg.resolved_head_dim
+    r = hd // rank_div
+    key = jax.random.PRNGKey(2)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B, K, G, nb, bs, maxb = 3, cfg.n_kv_heads, 1, 12, 4, 3
+    pool_k = jax.random.normal(k1, (nb, bs, K, r))
+    pool_v = jax.random.normal(k2, (nb, bs, K, r))
+    qg = jax.random.normal(k3, (B, K, G, hd))
+    # calibrated-style link matrices (r, hd); identity-ish at full rank
+    uk = pcache.kv_projection(jax.random.normal(k1, (64, hd)), r)[1]
+    uv = pcache.kv_projection(jax.random.normal(k2, (64, hd)), r)[1]
+    table = jnp.asarray(np.arange(B * maxb).reshape(B, maxb), jnp.int32)
+    ctx = jnp.asarray([2, 7, 11], jnp.int32)
+    scale = hd ** -0.5
+    o_new = runtime._paged_attn(qg, pool_k, pool_v, table, ctx,
+                                uk, uv, scale, 0)
+    # old formulation: gather -> reconstruct to full hd -> dense einsum
+    ck = pcache.reconstruct_kv(pcache.gather_kv(pool_k, table), uk)
+    cv = pcache.reconstruct_kv(pcache.gather_kv(pool_v, table), uv)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, ck).astype(jnp.float32) * scale
+    L = maxb * bs
+    valid = jnp.arange(L)[None, :] <= ctx[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_old = jnp.einsum("bkgt,btkd->bkgd", pr.astype(cv.dtype), cv)
+    np.testing.assert_allclose(np.asarray(o_new), np.asarray(o_old),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("cur_kv", [False, True])
+def test_decode_scan_kernel_on_off_identical(olmo, prompts, monkeypatch,
+                                             cur_kv):
+    """End-to-end greedy serving (prefill + multi-step decode windows)
+    emits identical tokens with the paged Pallas kernel forced on
+    (interpret mode on CPU) and forced off (rank-space XLA path) — for
+    dense AND CUR-KV pools: the gate may only change dispatch, never the
+    sampled stream (the prefill splice keys on cur_kv, not the gate)."""
+    cfg, params = olmo
+    kw = dict(cur_kv=True, kv_rank=cfg.resolved_head_dim // 2) \
+        if cur_kv else {}
+    pc = PagedConfig(block_size=4, n_blocks=16, max_blocks_per_seq=4, **kw)
+
+    def go(mode):
+        monkeypatch.setenv("REPRO_PAGED_KERNEL", mode)
+        out, srv = _run(params, cfg, pc, prompts[:2], n_new=5, C=2)
+        assert srv.stats()["n_decode_steps"] > 1   # scan windows ran
+        return out, srv.stats()["gathered_bytes_per_step"]
+
+    out_off, bytes_off = go("0")
+    out_on, bytes_on = go("1")
+    assert out_on == out_off
+    # the kernel path reads blocks in place: nothing is gathered
+    assert bytes_on == 0 and bytes_off > 0
 
 
 def test_kv_projection_reconstruction():

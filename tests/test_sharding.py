@@ -200,6 +200,34 @@ def test_paged_cache_specs_divisible():
     assert tuple(table) == ("data", None)
 
 
+def test_paged_cache_specs_kernel_pins_kv_heads():
+    """kernel=True (REPRO_PAGED_KERNEL path): the Pallas kernel tiles
+    (block, kv-head), so kv-heads is the only shardable pool axis —
+    non-divisible kv-heads replicate instead of falling back to the
+    rank/block axes (which would split in-kernel tiles)."""
+    from repro.configs import get_smoke
+    from repro.serving.paged_cache import PagedConfig, init_paged_cache
+    mesh = _mesh()
+    # real olmo: K=16 divides the 16-way model axis -> same spec both ways
+    cfg = get_config("olmo-1b")
+    cache, pc = sp.paged_cache_specs(cfg, SHAPES["decode_32k"])
+    specs = shd.paged_cache_pspecs(cache, cfg, mesh, kernel=True)
+    assert tuple(specs["k"]) == (None, None, None, "model", None)
+    # smoke olmo: K=4 does not divide 16; the einsum path falls back to
+    # the rank axis, the kernel path must replicate
+    scfg = get_smoke("olmo-1b")
+    pc = PagedConfig(block_size=16, n_blocks=64, max_blocks_per_seq=8)
+    scache = jax.eval_shape(lambda: init_paged_cache(scfg, pc))
+    fallback = shd.paged_cache_pspecs(scache, scfg, mesh)
+    assert tuple(fallback["k"]) == (None, None, None, None, "model")
+    pinned = shd.paged_cache_pspecs(scache, scfg, mesh, kernel=True)
+    assert pinned["k"] is None and pinned["v"] is None
+    # decode input specs are layout-identical on both paths
+    a = shd.paged_decode_pspecs(cfg, 16, 8, mesh)
+    b = shd.paged_decode_pspecs(cfg, 16, 8, mesh, kernel=True)
+    assert a == b
+
+
 def test_paged_cache_specs_cur_kv():
     from repro.serving.paged_cache import PagedConfig, init_paged_cache
     mesh = _mesh()
