@@ -50,7 +50,10 @@ def _pipeline_comparison(params, cfg, calib, quick):
     return rows, medians, speedup
 
 
-def run(quick=True, out=None):
+def run_results(quick=True):
+    """(rows, results-dict) — the dict feeds both ``--out`` here and the
+    schema-versioned BENCH_compression.json envelope from
+    ``benchmarks.run``."""
     rows = []
     params, cfg = get_trained_repro(quick=quick)
     ds = SyntheticLM(data_config(cfg, seed=1))
@@ -83,18 +86,23 @@ def run(quick=True, out=None):
     prows, medians, speedup = _pipeline_comparison(params, cfg, calib, quick)
     rows.extend(prows)
 
+    results = {
+        "config": cfg.name,
+        "n_layers": cfg.n_layers,
+        "pipeline_median_s": {k: round(v, 4)
+                              for k, v in medians.items()},
+        "speedup_loop_exact_vs_batched_randomized": round(speedup, 2),
+        "rows": [{"name": r[0], "us": round(r[1], 1),
+                  "derived": r[2]} for r in rows],
+    }
+    return rows, results
+
+
+def run(quick=True, out=None):
+    rows, results = run_results(quick)
     if out is not None:
         with open(out, "w") as f:
-            json.dump({
-                "config": cfg.name,
-                "n_layers": cfg.n_layers,
-                "pipeline_median_s": {k: round(v, 4)
-                                      for k, v in medians.items()},
-                "speedup_loop_exact_vs_batched_randomized":
-                    round(speedup, 2),
-                "rows": [{"name": r[0], "us": round(r[1], 1),
-                          "derived": r[2]} for r in rows],
-            }, f, indent=1)
+            json.dump(results, f, indent=1)
     return rows
 
 

@@ -30,7 +30,9 @@ R_UNIFORM = 32
 GRID = (4, 6, 8, 12, 16, 24, 32, 48, 64)
 
 
-def run(quick=True, out=None, plan_out=None):
+def run_results(quick=True, plan_out=None):
+    """(rows, results-dict) — the dict feeds both ``--out`` here and the
+    schema-versioned BENCH_plan.json envelope from ``benchmarks.run``."""
     rows = []
     params, cfg = get_trained_repro(quick=quick)
     ds = SyntheticLM(data_config(cfg, seed=1))
@@ -75,24 +77,30 @@ def run(quick=True, out=None, plan_out=None):
 
     if plan_out is not None:
         plan.save(plan_out)
+    results = {
+        "config": cfg.name,
+        "n_layers_compressed": N_LAYERS,
+        "budget_params": budget,
+        "realized_params": realized,
+        "uniform": {"r_max": R_UNIFORM, "ppl": round(ppl_u, 4),
+                    "compress_s": round(dt_u, 4)},
+        "planned": {"ranks": plan.ranks, "ppl": round(ppl_p, 4),
+                    "plan_s_median3": round(dt_plan, 4),
+                    "compress_s": round(dt_c, 4),
+                    "solver": plan.solver,
+                    "grid": list(GRID)},
+        "ppl_gain": round(ppl_u - ppl_p, 4),
+        "rows": [{"name": r[0], "us": round(r[1], 1),
+                  "derived": r[2]} for r in rows],
+    }
+    return rows, results
+
+
+def run(quick=True, out=None, plan_out=None):
+    rows, results = run_results(quick, plan_out=plan_out)
     if out is not None:
         with open(out, "w") as f:
-            json.dump({
-                "config": cfg.name,
-                "n_layers_compressed": N_LAYERS,
-                "budget_params": budget,
-                "realized_params": realized,
-                "uniform": {"r_max": R_UNIFORM, "ppl": round(ppl_u, 4),
-                            "compress_s": round(dt_u, 4)},
-                "planned": {"ranks": plan.ranks, "ppl": round(ppl_p, 4),
-                            "plan_s_median3": round(dt_plan, 4),
-                            "compress_s": round(dt_c, 4),
-                            "solver": plan.solver,
-                            "grid": list(GRID)},
-                "ppl_gain": round(ppl_u - ppl_p, 4),
-                "rows": [{"name": r[0], "us": round(r[1], 1),
-                          "derived": r[2]} for r in rows],
-            }, f, indent=1)
+            json.dump(results, f, indent=1)
     return rows
 
 

@@ -1,9 +1,17 @@
 """Benchmark driver — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (harness contract).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only MOD]
+``--out DIR`` additionally persists every module that exposes
+``run_results`` as ``DIR/BENCH_<name>.json`` in a schema-versioned
+envelope — the checked-in perf trajectory (``--out .`` from the repo
+root). Future PRs diff these artifacts instead of re-deriving baselines
+from CI logs.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only MOD] [--out DIR]
 """
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -22,9 +30,30 @@ MODULES = [
     "bench_activation_alignment", # Table 6
     "bench_kernels",              # kernel-level
     "bench_collectives",          # compressed vs dense psum payloads
-    "bench_serving",              # continuous batching vs static waves
+    "bench_serving",              # continuous batching + speculative
     "bench_roofline",             # dry-run roofline table
 ]
+
+# Envelope contract for the checked-in BENCH_*.json artifacts. Bump on
+# any backwards-incompatible change to the envelope itself; module
+# payloads under "results" version independently via their own fields.
+SCHEMA_VERSION = 1
+
+
+def write_envelope(out_dir: str, module: str, results, *,
+                   quick: bool) -> str:
+    """``BENCH_<name>.json`` with the versioned envelope; returns path."""
+    name = module[len("bench_"):] if module.startswith("bench_") \
+        else module
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"schema_version": SCHEMA_VERSION,
+                   "suite": "curing-repro-bench",
+                   "module": module,
+                   "quick": quick,
+                   "results": results}, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -32,14 +61,25 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep sizes (slower)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default=None,
+                    help="directory for BENCH_<name>.json envelopes "
+                         "(modules with run_results only)")
     args = ap.parse_args()
     mods = [args.only] if args.only else MODULES
+    quick = not args.full
     print("name,us_per_call,derived")
     for name in mods:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            rows = mod.run(quick=not args.full)
+            if hasattr(mod, "run_results"):
+                rows, results = mod.run_results(quick)
+                if args.out is not None:
+                    path = write_envelope(args.out, name, results,
+                                          quick=quick)
+                    print(f"# wrote {path}", file=sys.stderr)
+            else:
+                rows = mod.run(quick=quick)
             emit(rows)
         except Exception as e:  # noqa: BLE001 — keep the suite running
             traceback.print_exc(file=sys.stderr)

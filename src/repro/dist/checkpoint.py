@@ -70,6 +70,56 @@ def _from_host(arr: np.ndarray, dtype_tag: str) -> np.ndarray:
     return arr
 
 
+def tree_template(tree) -> Any:
+    """JSON-able structural description of a pytree (nested dict / list /
+    tuple containers, array leaves as shape+dtype). Paired with
+    :func:`template_from`, it lets a consumer ``restore`` a checkpoint
+    without re-deriving the producing computation's output structure —
+    e.g. a CUR-compressed parameter tree whose per-weight {CU, R} shapes
+    depend on a compression plan."""
+    if tree is None:
+        return {"kind": "none"}
+    if isinstance(tree, dict):
+        return {"kind": "dict",
+                "items": {str(k): tree_template(v)
+                          for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"kind": "list" if isinstance(tree, list) else "tuple",
+                "items": [tree_template(v) for v in tree]}
+    dtype = _BF16_TAG if tree.dtype == jnp.bfloat16 else str(
+        np.dtype(tree.dtype))
+    return {"kind": "leaf", "shape": [int(s) for s in tree.shape],
+            "dtype": dtype}
+
+
+def template_from(desc) -> Any:
+    """Inverse of :func:`tree_template`: rebuild a ShapeDtypeStruct
+    pytree suitable as a ``CheckpointManager.restore`` template."""
+    kind = desc["kind"]
+    if kind == "none":
+        return None
+    if kind == "dict":
+        return {k: template_from(v) for k, v in desc["items"].items()}
+    if kind in ("list", "tuple"):
+        items = [template_from(v) for v in desc["items"]]
+        return items if kind == "list" else tuple(items)
+    dtype = jnp.bfloat16 if desc["dtype"] == _BF16_TAG else np.dtype(
+        desc["dtype"])
+    return jax.ShapeDtypeStruct(tuple(desc["shape"]), dtype)
+
+
+def save_tree_template(path: str, tree) -> None:
+    """Write ``tree_template(tree)`` as JSON next to a checkpoint dir."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(tree_template(tree), f)
+
+
+def load_tree_template(path: str) -> Any:
+    with open(path) as f:
+        return template_from(json.load(f))
+
+
 class CheckpointManager:
     """Manages the checkpoint directory for one training run."""
 

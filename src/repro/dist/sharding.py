@@ -235,6 +235,17 @@ def param_pspecs(params, cfg: ModelConfig, mesh):
                  lambda path, leaf: _leaf_spec(path, leaf, cfg, mesh))
 
 
+def draft_param_pspecs(draft_params, cfg: ModelConfig, mesh):
+    """Specs for a speculative-decoding DRAFT parameter tree living on
+    the same mesh as the target's. The draft is the same architecture
+    CUR-compressed harder, so the layout contract is identical — but its
+    low ranks routinely fail the divisibility guard, and those factors
+    fall back to replicated (tiny by construction: a rank-r factor is
+    r/d_model of the dense weight). Kept as a named entry point so the
+    dry-run can assert both trees' specs coexist under one jit."""
+    return param_pspecs(draft_params, cfg, mesh)
+
+
 def opt_state_pspecs(opt_state, cfg: ModelConfig, mesh):
     """Specs for an AdamW state ({'step', 'moments'}): moments inherit the
     mirrored param's spec; int8-quantized codes keep it and their row

@@ -42,9 +42,11 @@ def use_paged_kernel() -> bool:
     return _on_tpu()
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "q_span"))
 def paged_attention_op(q, k_pool, v_pool, table, ctx_len, *,
-                       window: int = 0):
-    """Kernel entry: q (B, K, G, r) folded/pre-scaled -> (B, K, G, r)."""
+                       window: int = 0, q_span: int = 1):
+    """Kernel entry: q (B, K, G, r) folded/pre-scaled -> (B, K, G, r).
+    ``q_span`` > 1 is the multi-position speculative-verify layout."""
     return paged_attention(q, k_pool, v_pool, table, ctx_len,
-                           window=window, interpret=not _on_tpu())
+                           window=window, q_span=q_span,
+                           interpret=not _on_tpu())

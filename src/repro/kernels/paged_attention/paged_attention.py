@@ -47,7 +47,7 @@ NEG_INF = -1e30
 
 
 def _kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, bs, nb, window):
+            m_ref, l_ref, acc_ref, *, bs, nb, window, span=1):
     b = pl.program_id(0)
     j = pl.program_id(2)          # per-sequence block index (innermost)
 
@@ -59,9 +59,9 @@ def _kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
 
     ctx = ctx_ref[b]
     start = j * bs
-    # block is live unless unassigned, entirely past the context, or
-    # entirely before the sliding window
-    live = jnp.logical_and(tbl_ref[b, j] >= 0, start <= ctx)
+    # block is live unless unassigned, entirely past the last query
+    # position (ctx + span - 1), or entirely before the sliding window
+    live = jnp.logical_and(tbl_ref[b, j] >= 0, start <= ctx + span - 1)
     if window > 0:
         live = jnp.logical_and(live, start + bs - 1 > ctx - window)
 
@@ -74,9 +74,18 @@ def _kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)  # (G, bs)
         idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = idx <= ctx
+        if span > 1:
+            # speculative-verify layout: G = span * group, row g is query
+            # position ctx + g // group (same per-row mask as span
+            # sequential decode steps; one DMA'd KV tile serves them all)
+            goff = (jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+                    // (q.shape[0] // span))
+            qpos = ctx + goff
+        else:
+            qpos = ctx
+        mask = idx <= qpos
         if window > 0:
-            mask = jnp.logical_and(mask, idx > ctx - window)
+            mask = jnp.logical_and(mask, idx > qpos - window)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -97,22 +106,30 @@ def _kernel(tbl_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention(q, k_pool, v_pool, table, ctx_len, *, window: int = 0,
-                    interpret: bool = False):
+                    q_span: int = 1, interpret: bool = False):
     """q (B, K, G, r) folded/pre-scaled queries; k/v_pool
     (n_blocks, bs, K, r); table (B, maxb) int32 (-1 = unassigned);
     ctx_len (B,) newest-token index. Returns (B, K, G, r) rank-space
-    attention outputs (apply ``Uv`` outside for CUR-KV pools)."""
+    attention outputs (apply ``Uv`` outside for CUR-KV pools).
+
+    ``q_span = S > 1``: multi-position verify — ``G`` must be
+    ``S * group`` with row ``g`` the query at position ``ctx + g //
+    group`` (see ``ref.paged_attention_ref``); each pool block is still
+    DMA'd exactly once per (slot, kv-head)."""
     B, K, G, r = q.shape
     nb_pool, bs, Kp, rp = k_pool.shape
     if (Kp, rp) != (K, r) or v_pool.shape != k_pool.shape:
         raise ValueError(
             f"pool/query mismatch: q {q.shape}, k_pool {k_pool.shape}, "
             f"v_pool {v_pool.shape}")
+    if q_span > 1 and G % q_span != 0:
+        raise ValueError(f"q_span {q_span} must divide query rows {G}")
     if pltpu is None:  # pragma: no cover
         raise RuntimeError("paged_attention needs pallas.tpu "
                            "(PrefetchScalarGridSpec)")
     maxb = table.shape[1]
-    kernel = functools.partial(_kernel, bs=bs, nb=maxb, window=window)
+    kernel = functools.partial(_kernel, bs=bs, nb=maxb, window=window,
+                               span=q_span)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -39,25 +39,46 @@ def unfold_o(o: jnp.ndarray, uv) -> jnp.ndarray:
 
 
 def paged_attention_ref(q, k_pool, v_pool, table, ctx_len, *,
-                        window: int = 0):
-    """Gather-based oracle. q (B, K, G, r) folded/pre-scaled; pools
-    (n_blocks, bs, K, r); table (B, maxb); ctx_len (B,). -> (B, K, G, r)."""
+                        window: int = 0, q_span: int = 1):
+    """Gather-based oracle. q (B, K, G', r) folded/pre-scaled; pools
+    (n_blocks, bs, K, r); table (B, maxb); ctx_len (B,). -> (B, K, G', r).
+
+    ``q_span = S > 1`` is the speculative-verify layout: ``G' = S * G``
+    rows per kv-head, row ``g`` holding query position ``ctx + g // G``
+    of group member ``g % G`` (the caller flattens (B, S, K, G, r) to
+    (B, K, S*G, r)). Each row is masked to its own position — per-row
+    math identical to S sequential single-token calls — while the pool
+    gather is shared across all S positions, which is the whole point:
+    verifying k+1 draft positions costs ONE table-width gather instead
+    of k+1."""
     B, maxb = table.shape
     bs = k_pool.shape[1]
     L = maxb * bs
+    Gq = q.shape[2]
     ck = k_pool[jnp.maximum(table, 0)].reshape(B, L, *k_pool.shape[2:])
     cv = v_pool[jnp.maximum(table, 0)].reshape(B, L, *v_pool.shape[2:])
     s = jnp.einsum("bkgr,btkr->bkgt", q.astype(jnp.float32),
                    ck.astype(jnp.float32))
     idx = jnp.arange(L, dtype=jnp.int32)
     blk = jnp.repeat(table, bs, axis=1)               # (B, L) owning block
-    valid = (idx[None, :] <= ctx_len[:, None]) & (blk >= 0)
-    if window > 0:
-        valid &= idx[None, :] > (ctx_len[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    # no live position (inactive slot): all-masked softmax is uniform
-    # garbage — zero it to match the kernel's empty-accumulator output
-    p = p * valid.any(axis=-1)[:, None, None, None]
+    if q_span > 1:
+        off = jnp.arange(Gq, dtype=jnp.int32) // (Gq // q_span)
+        qpos = ctx_len[:, None] + off[None, :]        # (B, G') row position
+        valid = ((idx[None, None, :] <= qpos[:, :, None])
+                 & (blk >= 0)[:, None, :])
+        if window > 0:
+            valid &= idx[None, None, :] > (qpos[:, :, None] - window)
+        s = jnp.where(valid[:, None, :, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = p * valid.any(axis=-1)[:, None, :, None]
+    else:
+        valid = (idx[None, :] <= ctx_len[:, None]) & (blk >= 0)
+        if window > 0:
+            valid &= idx[None, :] > (ctx_len[:, None] - window)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # no live position (inactive slot): all-masked softmax is uniform
+        # garbage — zero it to match the kernel's empty-accumulator output
+        p = p * valid.any(axis=-1)[:, None, None, None]
     o = jnp.einsum("bkgt,btkr->bkgr", p, cv.astype(jnp.float32))
     return o.astype(q.dtype)

@@ -29,7 +29,7 @@ from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
 from repro.core.compress import rank_key
 from repro.data.tokens import DataConfig, SyntheticLM
-from repro.dist.checkpoint import CheckpointManager
+from repro.dist.checkpoint import CheckpointManager, save_tree_template
 from repro.models import init_params
 from repro.plan import CompressionPlan, config_hash, plan_for_model
 from repro.serve.engine import generate
@@ -128,7 +128,47 @@ def cure(args) -> dict:
     t0 = time.perf_counter()
     mgr = CheckpointManager(args.ckpt_dir, keep_n=1)
     mgr.save(0, {"params": cparams})
+    save_tree_template(os.path.join(args.ckpt_dir, "template.json"),
+                       {"params": cparams})
     stages["save"] = time.perf_counter() - t0
+
+    # ---- draft (self-drafted speculative decoding companion) ----------
+    draft_report = None
+    if args.emit_draft:
+        t0 = time.perf_counter()
+        dccfg = CURConfig(r_max=args.r_max,
+                          n_compress_layers=args.draft_layers,
+                          selection=args.selection, svd=args.svd,
+                          fold_u=not args.no_fold, pipeline=args.pipeline,
+                          seed=args.seed)
+        dplan, _ = plan_for_model(
+            params, cfg, dccfg, calib, budget_kind="params",
+            budget_value=args.draft_budget_params,
+            n_layers=args.draft_layers, grid=args.grid,
+            solver=args.solver, arch=cfg.name)
+        dccfg = dplan.to_cur_config(
+            dataclasses.replace(dccfg, pipeline=args.pipeline))
+        dparams, _, dinfo = compress_model(params, cfg, dccfg, calib,
+                                           layers=dplan.layers)
+        draft_dir = os.path.join(args.ckpt_dir, "draft")
+        dmgr = CheckpointManager(draft_dir, keep_n=1)
+        dmgr.save(0, {"params": dparams})
+        save_tree_template(os.path.join(draft_dir, "template.json"),
+                           {"params": dparams})
+        dplan.save(os.path.join(draft_dir, "plan.json"))
+        stages["draft"] = time.perf_counter() - t0
+        dw = dinfo.weights
+        d_before = sum(x.params_before for x in dw)
+        d_after = sum(x.params_after for x in dw)
+        draft_report = {
+            "ckpt_dir": draft_dir,
+            "budget_params": args.draft_budget_params,
+            "layers_compressed": dinfo.layers,
+            "ranks": {rank_key(x.layer, x.name): x.rank for x in dw},
+            "params_deployed": d_after,
+            "realized_fraction": round(d_after / max(d_before, 1), 6),
+            "model_params_saved": dinfo.params_saved,
+        }
 
     # ---- smoke-generate -----------------------------------------------
     t0 = time.perf_counter()
@@ -196,6 +236,8 @@ def cure(args) -> dict:
                      "tok_per_s": round(
                          n_tokens / max(stages["generate"], 1e-9), 1)},
     }
+    if draft_report is not None:
+        report["draft"] = draft_report
     return report
 
 
@@ -234,6 +276,19 @@ def main(argv=None):
     ap.add_argument("--emit-plan", default=None,
                     help="write the allocated plan JSON here (budget "
                          "runs only)")
+    # speculative-decoding draft companion
+    ap.add_argument("--emit-draft", action="store_true",
+                    help="also compress the SAME checkpoint to an "
+                         "aggressive plan-allocated budget and save it "
+                         "under <ckpt-dir>/draft — the self-drafted "
+                         "speculative-decoding draft model "
+                         "(serve with --draft <ckpt-dir>/draft)")
+    ap.add_argument("--draft-budget-params", type=float, default=0.35,
+                    help="draft parameter budget (fraction of targeted "
+                         "dense params; repro.plan allocates the ranks)")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="layers to compress in the draft "
+                         "(default: --layers)")
     ap.add_argument("--calib-batches", type=int, default=2)
     ap.add_argument("--calib-batch", type=int, default=2)
     ap.add_argument("--calib-len", type=int, default=64)
@@ -259,6 +314,8 @@ def main(argv=None):
     args.budget = budgets[0] if budgets else None
     if args.grid:
         args.grid = tuple(int(x) for x in args.grid.split(","))
+    if args.draft_layers is None:
+        args.draft_layers = args.layers
 
     report = cure(args)
 
@@ -269,7 +326,13 @@ def main(argv=None):
           f"{report['layers_compressed']}")
     print("  " + "  ".join(f"{k}={s[k]:.3f}s" for k in
                            ("init", "calibrate", "plan", "compress",
-                            "fold", "save", "generate", "total")))
+                            "fold", "save", "draft", "generate", "total")
+                           if k in s))
+    if "draft" in report:
+        d = report["draft"]
+        print(f"  draft: {d['params_deployed']/1e3:.0f}k params "
+              f"(fraction {d['realized_fraction']:.3f}) ranks "
+              f"{d['ranks']} -> {d['ckpt_dir']}")
     pl = report["plan"]
     if pl["source"] != "uniform":
         b = pl["budget"]

@@ -56,7 +56,8 @@ def _scalable_reps(cfg) -> int:
 
 
 def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int,
-                  paged: bool = False, paged_kernel: bool = True):
+                  paged: bool = False, paged_kernel: bool = True,
+                  spec_k: int = 0):
     """Lower + compile one artifact. Returns (compiled, lower_s,
     compile_s)."""
     params = sp.param_specs(cfg)
@@ -66,7 +67,64 @@ def _compile_cell(cfg, shape, mesh, *, cur: bool, microbatch: int,
     p_sh = _named(p_specs, mesh)
 
     t0 = time.time()
-    if paged and shape.kind == "decode":
+    if spec_k and paged and shape.kind == "decode":
+        # speculative window: draft + target parameter trees and both
+        # paged pools coexist under ONE jit — the contract this cell
+        # proves is that their PartitionSpecs compose on the same mesh
+        import dataclasses as _dc
+
+        from repro.serving import runtime as srt
+        from repro.serving import speculative as spd
+        srt.check_supported(cfg)
+        kern = paged_kernel
+        cache, pc = sp.paged_cache_specs(cfg, shape)
+        c_specs = shd.paged_cache_pspecs(cache, cfg, mesh, kernel=kern)
+        c_sh = _named(c_specs, mesh)
+        d_params = sp.fold_cur_struct(
+            sp.structural_cur(sp.param_specs(cfg), cfg,
+                              CURConfig(r_max=64)))
+        dp_specs = shd.draft_param_pspecs(d_params, cfg, mesh)
+        dp_sh = _named(dp_specs, mesh)
+        pc_d = _dc.replace(pc, cur_kv=True,
+                           kv_rank=max(1, cfg.resolved_head_dim // 4))
+        from repro.serving.paged_cache import init_paged_cache
+        d_cache = jax.eval_shape(lambda: init_paged_cache(cfg, pc_d))
+        dc_specs = shd.paged_cache_pspecs(d_cache, cfg, mesh, kernel=kern)
+        dc_sh = _named(dc_specs, mesh)
+        tokens, table, ctx, active = sp.paged_decode_input_specs(
+            cfg, shape, pc)
+        in_specs = shd.paged_decode_pspecs(
+            cfg, shape.global_batch, pc.max_blocks_per_seq, mesh,
+            kernel=kern)
+        in_sh = tuple(_named(s, mesh) for s in in_specs)
+        B = shape.global_batch
+        base_keys = jnp.zeros((B, 2), jnp.uint32)
+        gen_starts = jnp.zeros((B,), jnp.int32)
+        sampling = (jnp.zeros((B,), jnp.float32),
+                    jnp.zeros((B,), jnp.int32),
+                    jnp.ones((B,), jnp.float32))
+
+        def spec_step(t_params, d_params, tokens, t_cache, d_cache,
+                      table, ctx, active):
+            d_toks, d_probs, d_cache = spd.draft_tokens(
+                d_params, cfg, pc_d, tokens, d_cache, table, ctx,
+                active, base_keys, gen_starts, *sampling, spec_k, mesh,
+                greedy=True)
+            ver = jnp.concatenate([tokens, d_toks], axis=1)
+            emitted, n_emit, lps, t_cache = spd.verify_tokens(
+                t_params, cfg, pc, ver, d_toks, d_probs, t_cache, table,
+                ctx, active, base_keys, gen_starts, *sampling, mesh,
+                greedy=True)
+            return emitted, n_emit, t_cache, d_cache
+
+        jitted = jax.jit(
+            spec_step,
+            in_shardings=(p_sh, dp_sh, in_sh[0], c_sh, dc_sh, in_sh[1],
+                          in_sh[2], in_sh[3]),
+            out_shardings=(None, None, c_sh, dc_sh))
+        lowered = jitted.lower(params, d_params, tokens, cache, d_cache,
+                               table, ctx, active)
+    elif paged and shape.kind == "decode":
         from repro.serving import runtime as srt
         srt.check_supported(cfg)
         # validate the sharding contract of the path production will run
@@ -165,8 +223,8 @@ def _cost_triple(compiled):
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                cur: bool = False, microbatch: int = 0, paged: bool = False,
-               paged_kernel: bool = True, verbose: bool = True,
-               extrapolate: bool = True):
+               paged_kernel: bool = True, spec_k: int = 0,
+               verbose: bool = True, extrapolate: bool = True):
     """Lower + compile one (arch, shape, mesh) cell.
 
     XLA's cost_analysis counts while-loop bodies once, so the scanned
@@ -201,7 +259,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     compiled, t_lower, t_compile = _compile_cell(
         cfg, shape, mesh, cur=cur, microbatch=microbatch, paged=paged,
-        paged_kernel=paged_kernel)
+        paged_kernel=paged_kernel, spec_k=spec_k)
     mem = compiled.memory_analysis()
     raw_flops, raw_bytes, raw_ess, raw_coll = _cost_triple(compiled)
 
@@ -209,11 +267,13 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if extrapolate and R > 1:
         c1, _, t1 = _compile_cell(_reduced_cfg(cfg, 1), shape, mesh,
                                   cur=cur, microbatch=microbatch,
-                                  paged=paged, paged_kernel=paged_kernel)
+                                  paged=paged, paged_kernel=paged_kernel,
+                                  spec_k=spec_k)
         f1, b1, e1, coll1 = _cost_triple(c1)
         c2, _, t2 = _compile_cell(_reduced_cfg(cfg, 2), shape, mesh,
                                   cur=cur, microbatch=microbatch,
-                                  paged=paged, paged_kernel=paged_kernel)
+                                  paged=paged, paged_kernel=paged_kernel,
+                                  spec_k=spec_k)
         f2, b2, e2, coll2 = _cost_triple(c2)
 
         def _extrap(x1, x2):
@@ -263,7 +323,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     )
     result = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
-        "cur": cur, "paged": paged, "status": "OK",
+        "cur": cur, "paged": paged, "spec_k": spec_k, "status": "OK",
         "cost_basis": cost_basis,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "compile_extra_s": t_compile_extra,
@@ -315,6 +375,11 @@ def main():
                     help="with --paged: validate the einsum-path pool "
                          "sharding (rank/block-axis fallbacks) instead of "
                          "the default kernel-path kv-head-pinned specs")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="with --paged: compile a draft-K/verify-1 "
+                         "speculative window — target + structurally "
+                         "CURed draft params and both paged pools under "
+                         "one jit (proves the sharding specs coexist)")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--no-extrapolate", action="store_true",
                     help="single compile per cell (multi-pod pass: proves "
@@ -339,6 +404,7 @@ def main():
                                    microbatch=args.microbatch,
                                    paged=args.paged,
                                    paged_kernel=not args.paged_einsum_specs,
+                                   spec_k=args.spec,
                                    extrapolate=not args.no_extrapolate)
                 except Exception as e:  # noqa: BLE001 — record & continue
                     traceback.print_exc()

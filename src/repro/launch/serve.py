@@ -11,6 +11,15 @@ arrivals, per-request generation budgets — through the
 mamba) falls back to the static-batch ``serve.engine.generate`` path.
 ``--paged-kernel`` sets REPRO_PAGED_KERNEL (the block-table Pallas
 decode-attention kernel; auto = TPU only) before the server compiles.
+
+Speculative decoding: ``--draft <dir> --spec-k K`` loads a CURed draft
+checkpoint (written by ``launch/cure.py --emit-draft``, restored through
+its ``template.json`` sidecar) and serves draft-K/verify-1 windows;
+``--draft self`` self-drafts with the target's own weights (a sanity
+mode: accept rate 1), and ``--draft self:N`` drafts with the target's
+own first N layers (zero-training early-exit self-draft — the
+bench_serving speculative scenario's draft). ``--draft-kv-rank`` gives
+the draft its own CUR-KV pool rank.
 """
 import argparse
 import os
@@ -112,6 +121,17 @@ def main():
     ap.add_argument("--legacy", action="store_true",
                     help="seed static-batch engine instead of the "
                          "continuous-batching runtime")
+    ap.add_argument("--draft", default=None,
+                    help="speculative decoding: a draft checkpoint dir "
+                         "from `cure.py --emit-draft`, 'self' to "
+                         "self-draft with the target weights, or "
+                         "'self:N' for an early-exit draft from the "
+                         "target's first N layers")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative window")
+    ap.add_argument("--draft-kv-rank", type=int, default=0,
+                    help="CUR-KV rank for the DRAFT's paged pool "
+                         "(0: same pool config as the target)")
     args = ap.parse_args()
     if args.paged_kernel is not None:
         os.environ["REPRO_PAGED_KERNEL"] = {
@@ -161,15 +181,47 @@ def main():
     pc = PagedConfig.sized_for(
         max_len, args.max_concurrency, block_size=args.block_size,
         cur_kv=args.cur_kv, kv_rank=kv_rank)
+    draft_params, draft_cfg, draft_pc = None, None, None
+    if args.draft == "self":
+        draft_params = params
+    elif args.draft and args.draft.startswith("self:"):
+        from repro.serving.speculative import early_exit_draft
+        n = int(args.draft.split(":", 1)[1])
+        draft_params, draft_cfg = early_exit_draft(params, cfg, n)
+        print(f"early-exit self-draft: first {draft_cfg.n_layers} of "
+              f"{cfg.n_layers} layers")
+    elif args.draft:
+        from repro.dist.checkpoint import (CheckpointManager,
+                                           load_tree_template)
+        template = load_tree_template(
+            os.path.join(args.draft, "template.json"))
+        step, tree = CheckpointManager(args.draft).restore(template)
+        draft_params = tree["params"]
+        print(f"draft checkpoint {args.draft} (step {step})")
+    if draft_params is not None and args.draft_kv_rank:
+        import dataclasses
+        draft_pc = dataclasses.replace(pc, cur_kv=True,
+                                       kv_rank=args.draft_kv_rank)
     server = Server(params, cfg, pc,
-                    max_concurrency=args.max_concurrency)
+                    max_concurrency=args.max_concurrency,
+                    draft_params=draft_params, draft_cfg=draft_cfg,
+                    draft_pc=draft_pc,
+                    spec_k=args.spec_k if draft_params is not None else 0)
     from repro.serving.runtime import use_paged_kernel
     print(f"serving {args.n_requests} requests "
           f"(concurrency {args.max_concurrency}, block {args.block_size}, "
           f"pool {pc.n_blocks} blocks, cur_kv={args.cur_kv}, "
-          f"paged_kernel={'on' if use_paged_kernel() else 'off'})")
-    finished, _ = run_continuous(server, workload,
-                                 temperature=args.temperature)
+          f"paged_kernel={'on' if use_paged_kernel() else 'off'}"
+          + (f", spec_k={server.spec_k}" if server.spec_k else "") + ")")
+    finished, stats = run_continuous(server, workload,
+                                     temperature=args.temperature)
+    if server.spec_k:
+        print(f"speculative: accept rate "
+              f"{stats['spec_accept_rate']:.3f} over "
+              f"{stats['n_spec_windows']} windows "
+              f"({stats['n_spec_fallbacks']} fallbacks) | draft "
+              f"{stats['spec_draft_time_s']:.2f}s verify "
+              f"{stats['spec_verify_time_s']:.2f}s")
     first = finished[min(finished)]
     print(f"request 0: {len(first.out_tokens)} tokens "
           f"{first.out_tokens[:8]}{'...' if len(first.out_tokens) > 8 else ''}")

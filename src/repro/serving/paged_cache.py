@@ -249,6 +249,43 @@ def write_token(pool: jnp.ndarray, x: jnp.ndarray, table: jnp.ndarray,
     return pool.at[blk, off].set(x, mode="drop")
 
 
+def write_span(pool: jnp.ndarray, x: jnp.ndarray, table: jnp.ndarray,
+               start: jnp.ndarray, active: jnp.ndarray,
+               block_size: int) -> jnp.ndarray:
+    """Scatter ``S`` consecutive positions per sequence (the speculative
+    draft/verify write): x (B, S, K, r) holds positions
+    ``start .. start + S - 1``. Inactive rows, unassigned table entries,
+    and positions past the table width all drop (same ``n_blocks``
+    sentinel discipline as :func:`write_prompt` — never -1, which wraps
+    before ``mode="drop"`` applies)."""
+    B, S = x.shape[:2]
+    n_blocks = pool.shape[0]
+    maxb = table.shape[1]
+    t = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B, S)
+    bi = t // block_size
+    blk = jnp.take_along_axis(table, jnp.clip(bi, 0, maxb - 1), axis=1)
+    valid = active[:, None] & (blk >= 0) & (bi < maxb)
+    blk = jnp.where(valid, blk, n_blocks)
+    off = t % block_size
+    return pool.at[blk, off].set(x, mode="drop")
+
+
+def copy_cache_blocks(cache: dict, src: jnp.ndarray,
+                      dst: jnp.ndarray) -> dict:
+    """Device-side block copies for copy-on-write forks: pool block
+    ``src[i]`` -> ``dst[i]`` in EVERY layer's k and v pool (the target
+    and draft caches share one block table, so the caller applies the
+    same copy list to both). Pad unused rows with ``dst = n_blocks``
+    (drop sentinel); their ``src`` is clamped for the gather."""
+    new = dict(cache)
+    for name in ("k", "v"):
+        pool = cache[name]                     # (L, nb, bs, K, r)
+        nb = pool.shape[1]
+        data = jnp.take(pool, jnp.clip(src, 0, nb - 1), axis=1)
+        new[name] = pool.at[:, dst].set(data, mode="drop")
+    return new
+
+
 def gather_kv(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """Gather every sequence's cache view: (B, maxb*bs, K, r). Unassigned
     table entries read block 0 — callers mask by context length."""

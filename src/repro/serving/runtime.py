@@ -42,7 +42,7 @@ from repro.serving import paged_cache as pcache
 
 
 def _paged_attn(qg, k_pool, v_pool, table, ctx_len, uk, uv, scale,
-                window: int, kernel=None):
+                window: int, kernel=None, q_span: int = 1):
     """Rank-space paged attention for one layer's single-token queries.
 
     qg (B, K, G, hd) grouped queries; pools (n_blocks, bs, K, r).
@@ -52,16 +52,18 @@ def _paged_attn(qg, k_pool, v_pool, table, ctx_len, uk, uv, scale,
     pins the dispatch explicitly (the Server resolves the env gate ONCE
     and threads it here, so a mid-session env flip cannot make a lazily
     traced step disagree with its jit-cache key); None re-reads the env
-    at trace time."""
+    at trace time. ``q_span = S > 1`` is the speculative-verify layout
+    (G = S * group, per-row positions ctx + row // group) — the pool
+    read is shared across all S positions on both dispatch paths."""
     if kernel is None:
         kernel = use_paged_kernel()
     qf = fold_q(qg, uk, scale)                    # (B, K, G, r)
     if kernel:
         o_r = paged_attention_op(qf, k_pool, v_pool, table, ctx_len,
-                                 window=window)
+                                 window=window, q_span=q_span)
     else:
         o_r = paged_attention_ref(qf, k_pool, v_pool, table, ctx_len,
-                                  window=window)
+                                  window=window, q_span=q_span)
     return unfold_o(o_r, uv)                      # (B, K, G, hd)
 
 
@@ -223,6 +225,63 @@ def paged_decode(params, cfg: ModelConfig, pc: pcache.PagedConfig,
         x = _channel_mix(x, p, spec, cfg, mesh)
     x = norm(x, params.get("final_norm"), cfg)
     logits = _unembed(params, cfg, x)[:, 0, :]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_k, new_v
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# multi-position verify (speculative decoding)
+# ---------------------------------------------------------------------------
+
+def paged_verify(params, cfg: ModelConfig, pc: pcache.PagedConfig,
+                 tokens: jnp.ndarray, cache: dict, table: jnp.ndarray,
+                 ctx_len: jnp.ndarray, active: jnp.ndarray, mesh=None,
+                 kernel=None):
+    """One forward over ``S`` consecutive positions per slot — the
+    speculative verify step.
+
+    tokens (B, S): token ``j`` is the input at position ``ctx + j``
+    (j = 0 is the slot's pending ``next_token``, the rest are draft
+    proposals). Per layer, all S positions' roped K/V are written to the
+    (forked) pool FIRST, then every query attends through the pool with
+    its own causal mask ``idx <= ctx + j`` — per-row math identical to S
+    sequential :func:`paged_decode` calls, which is what makes the
+    greedy accept path bit-identical to non-speculative decoding, while
+    the pool is read once per (slot, layer) instead of S times. Returns
+    (logits (B, S, V), new cache); ``logits[:, j]`` is the target
+    distribution for the token AFTER position ``ctx + j``."""
+    check_supported(cfg)
+    x = _embed(params, cfg, {"tokens": tokens})
+    B, S, _ = x.shape
+    pos = ctx_len[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    scale = cfg.resolved_head_dim ** -0.5
+    K = cfg.n_kv_heads
+    new_k, new_v = cache["k"], cache["v"]
+    for li, spec, p in iter_blocks(params, cfg):
+        win = cfg.window if spec.mixer == ATTN_LOCAL else 0
+        h = norm(x, p.get("norm1"), cfg)
+        q, k, v = attn.qkv_project(h, p, cfg, pos)        # (B, S, ., hd)
+        qk, uk, qv, uv = _layer_proj(cache, li)
+        pool_k = pcache.write_span(
+            new_k[li], pcache.compress_kv(k, qk), table, ctx_len, active,
+            pc.block_size)
+        pool_v = pcache.write_span(
+            new_v[li], pcache.compress_kv(v, qv), table, ctx_len, active,
+            pc.block_size)
+        new_k = new_k.at[li].set(pool_k)
+        new_v = new_v.at[li].set(pool_v)
+        qg = attn._group_q(q, K)                          # (B, S, K, G, hd)
+        G = qg.shape[3]
+        qflat = jnp.transpose(qg, (0, 2, 1, 3, 4)).reshape(B, K, S * G, -1)
+        o = _paged_attn(qflat, pool_k, pool_v, table, ctx_len, uk, uv,
+                        scale, win, kernel, q_span=S)
+        o = o.reshape(B, K, S, G, -1).transpose(0, 2, 1, 3, 4)
+        o = o.reshape(B, S, -1)
+        x = x + apply_w(o, p["wo"])
+        x = _channel_mix(x, p, spec, cfg, mesh)
+    x = norm(x, params.get("final_norm"), cfg)
+    logits = _unembed(params, cfg, x)                     # (B, S, V)
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = new_k, new_v
     return logits, new_cache

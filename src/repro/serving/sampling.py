@@ -52,12 +52,13 @@ def batch_request_keys(seeds, rids, steps):
     return jax.vmap(one)(seeds, rids, steps)
 
 
-def _sample_one(logits, temp, top_k, top_p, key):
-    """logits (V,) f32 -> (token, logprob-from-untempered-dist)."""
+def _filtered_logits(logits, temp, top_k, top_p):
+    """(V,) f32 -> temperature-scaled, top-k/top-p-filtered logits — the
+    categorical's exact input. Factored out of ``_sample_one`` so the
+    speculative verify path filters the target and draft distributions
+    with bit-identical machinery: rejection sampling is only
+    distribution-exact against softmax(_filtered_logits(target))."""
     V = logits.shape[0]
-    logp = jax.nn.log_softmax(logits)
-    greedy = jnp.argmax(logits).astype(jnp.int32)
-
     scaled = logits / jnp.maximum(temp, 1e-6)
     # top-k: threshold at the k-th largest scaled logit (k=0 disables)
     desc = jnp.sort(scaled)[::-1]
@@ -69,8 +70,14 @@ def _sample_one(logits, temp, top_k, top_p, key):
     probs = jax.nn.softmax(scaled)[order]
     prev_cum = jnp.cumsum(probs) - probs
     keep = jnp.zeros((V,), bool).at[order].set(prev_cum < top_p)
-    scaled = jnp.where(keep, scaled, -jnp.inf)
+    return jnp.where(keep, scaled, -jnp.inf)
 
+
+def _sample_one(logits, temp, top_k, top_p, key):
+    """logits (V,) f32 -> (token, logprob-from-untempered-dist)."""
+    logp = jax.nn.log_softmax(logits)
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+    scaled = _filtered_logits(logits, temp, top_k, top_p)
     sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
     tok = jnp.where(temp <= 0.0, greedy, sampled)
     return tok, logp[tok]

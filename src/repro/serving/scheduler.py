@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -57,6 +57,16 @@ class Slot:
     ctx_len: int            # tokens currently materialized in the pool
     next_token: int         # sampled but not yet written to the pool
     admit_seq: int          # admission order (newest preempted first)
+
+
+@dataclasses.dataclass
+class SpecFork:
+    """A speculative window's forked block state: per-slot forked block
+    lists (shared ids + private replacements for written-range blocks)
+    and the (src, dst) device copies the caller must apply to every pool
+    before drafting into ``tables``."""
+    tables: Dict[int, List[int]]
+    copies: List[Tuple[int, int]]
 
 
 @dataclasses.dataclass
@@ -168,6 +178,79 @@ class Scheduler:
         slot.req.n_preempted += 1
         self.n_preemptions += 1
         self.queue.appendleft(slot.req)
+
+    # -- speculative fork / commit -------------------------------------
+    def fork_for_spec(self, k: int) -> Optional[SpecFork]:
+        """Fork every active slot's block list for a k-token speculative
+        window (the verify forward writes positions
+        ``ctx_len .. ctx_len + k``). Blocks in that write range are never
+        left shared: the boundary block (which still holds live parent
+        positions when ``ctx_len % block_size != 0``) is copy-on-write'd
+        with a device copy scheduled in ``SpecFork.copies``; other shared
+        blocks in the range hold only dead parent data, so they are
+        swapped for fresh blocks without copying. Fresh blocks extend
+        coverage to the window's last position.
+
+        Returns None — with every refcount rolled back — when the pool
+        cannot cover the window; the caller falls back to plain decode.
+        Speculation never preempts."""
+        bs = self.pc.block_size
+        tables: Dict[int, List[int]] = {}
+        copies: List[Tuple[int, int]] = []
+        forked: List[List[int]] = []
+
+        def rollback() -> None:
+            for blocks in forked:
+                self.alloc.free(blocks)
+
+        for i in self.active_slots:
+            slot = self.slots[i]
+            c = slot.ctx_len
+            last = min(c + k, self.pc.max_len - 1)
+            spec = self.alloc.fork(slot.blocks)
+            forked.append(spec)
+            for bi in range(c // bs, min(last // bs, len(spec) - 1) + 1):
+                old = spec[bi]
+                if self.alloc.ref(old) <= 1:
+                    continue
+                nb = self.alloc.copy_on_write(old)
+                if nb is None:
+                    rollback()
+                    return None
+                if bi == c // bs and c % bs:
+                    # live parent positions < c share this block: the
+                    # private replacement needs their data
+                    copies.append((old, nb))
+                spec[bi] = nb
+            while len(spec) * bs <= last:
+                fresh = self.alloc.alloc(1)
+                if fresh is None:
+                    rollback()
+                    return None
+                spec.extend(fresh)
+            tables[i] = spec
+        return SpecFork(tables=tables, copies=copies)
+
+    def commit_spec(self, slot_id: int, spec_blocks: List[int],
+                    n_tokens: int) -> None:
+        """Adopt a slot's forked list after ``n_tokens`` accepted
+        positions: advance ``ctx_len``, free the parent's list, and trim
+        fork blocks past the next write position back to the pool."""
+        slot = self.slots[slot_id]
+        old = slot.blocks
+        slot.ctx_len += n_tokens
+        keep = min(len(spec_blocks),
+                   slot.ctx_len // self.pc.block_size + 1)
+        slot.blocks = spec_blocks[:keep]
+        if spec_blocks[keep:]:
+            self.alloc.free(spec_blocks[keep:])
+        self.alloc.free(old)
+
+    def abort_spec(self, fork: SpecFork) -> None:
+        """Roll a fork back (e.g. after a failed device step): drop every
+        forked reference; parents are untouched."""
+        for blocks in fork.tables.values():
+            self.alloc.free(blocks)
 
     # -- retirement ----------------------------------------------------
     def retire(self, slot_id: int) -> Request:

@@ -9,7 +9,9 @@ bucket. Reports TTFT, tokens/s, and queue-depth statistics.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional
 
 import jax
@@ -19,6 +21,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.serving import paged_cache as pcache
 from repro.serving import runtime
+from repro.serving import speculative
 from repro.serving.sampling import (
     SamplingParams, batch_base_keys, batch_request_keys, greedy_tokens,
     pack_params, sample_tokens)
@@ -38,8 +41,27 @@ def _bucket(n: int, lo: int, hi: int) -> int:
 # fresh Server (benchmark reruns, worker restarts) never recompiles. The
 # REPRO_PAGED_KERNEL gate resolves at trace time inside the step bodies,
 # so its resolved value is part of the key — flipping the env var between
-# Server constructions compiles fresh steps instead of reusing stale ones
-_JIT_CACHE: dict = {}
+# Server constructions compiles fresh steps instead of reusing stale ones.
+# LRU-bounded: each entry pins compiled executables (and their weight-
+# sized constants) for the process lifetime, and spec-decode servers add
+# a second entry per (draft, target, k) combination — sweeping k in a
+# benchmark would otherwise grow device memory without bound.
+_JIT_CACHE: "OrderedDict" = OrderedDict()
+_JIT_CACHE_CAP = 8
+
+
+def clear_jit_cache() -> None:
+    """Drop every cached compiled step function (frees the compiled
+    executables once no live Server references them)."""
+    _JIT_CACHE.clear()
+
+
+def _jit_cache_put(key, value):
+    _JIT_CACHE[key] = value
+    _JIT_CACHE.move_to_end(key)
+    while len(_JIT_CACHE) > _JIT_CACHE_CAP:
+        _JIT_CACHE.popitem(last=False)
+    return value
 
 
 def _jitted_steps(cfg: ModelConfig, pc, mesh):
@@ -49,7 +71,9 @@ def _jitted_steps(cfg: ModelConfig, pc, mesh):
     # first request
     kern = runtime.use_paged_kernel()
     key = (cfg, pc, None if mesh is None else id(mesh), kern)
-    if key not in _JIT_CACHE:
+    if key in _JIT_CACHE:
+        _JIT_CACHE.move_to_end(key)
+    else:
         def _prefill(params, tokens, lengths, cache, table):
             return runtime.paged_prefill(params, cfg, pc, tokens,
                                          lengths, cache, table, mesh,
@@ -70,19 +94,77 @@ def _jitted_steps(cfg: ModelConfig, pc, mesh):
 
         # the cache pytree is donated: pool updates alias in place instead
         # of copying the full KV pool every step
-        _JIT_CACHE[key] = (
+        _jit_cache_put(key, (
             jax.jit(_prefill, donate_argnums=(3,)),
             jax.jit(_decode, donate_argnums=(2,)),
             jax.jit(_decode_scan, static_argnames=("n_steps", "greedy"),
-                    donate_argnums=(2,)))
+                    donate_argnums=(2,))))
     return _JIT_CACHE[key]
+
+
+def _jitted_spec_steps(cfg_t: ModelConfig, pc_t, cfg_d: ModelConfig,
+                       pc_d, k: int, mesh):
+    """Compiled (draft, verify, block-copy) triple for a speculative
+    window of k tokens. Keyed separately from the plain steps: the pair
+    couples two model/pool layouts plus the window length."""
+    kern = runtime.use_paged_kernel()
+    key = ("spec", cfg_d, cfg_t, pc_d, pc_t, k,
+           None if mesh is None else id(mesh), kern)
+    if key in _JIT_CACHE:
+        _JIT_CACHE.move_to_end(key)
+        return _JIT_CACHE[key]
+
+    def _draft(params, tokens, cache, table, ctx, active, base_keys,
+               gen_starts, temps, top_ks, top_ps, greedy):
+        return speculative.draft_tokens(
+            params, cfg_d, pc_d, tokens, cache, table, ctx, active,
+            base_keys, gen_starts, temps, top_ks, top_ps, k, mesh,
+            greedy=greedy, kernel=kern)
+
+    def _verify(params, tokens, d_toks, d_probs, cache, table, ctx,
+                active, base_keys, gen_starts, temps, top_ks, top_ps,
+                greedy):
+        return speculative.verify_tokens(
+            params, cfg_t, pc_t, tokens, d_toks, d_probs, cache, table,
+            ctx, active, base_keys, gen_starts, temps, top_ks, top_ps,
+            mesh, greedy=greedy, kernel=kern)
+
+    def _copy(cache, src, dst):
+        return pcache.copy_cache_blocks(cache, src, dst)
+
+    return _jit_cache_put(key, (
+        jax.jit(_draft, static_argnames=("greedy",), donate_argnums=(2,)),
+        jax.jit(_verify, static_argnames=("greedy",), donate_argnums=(4,)),
+        jax.jit(_copy, donate_argnums=(0,))))
+
+
+def _jitted_draft_sync(cfg_d: ModelConfig, pc_d, mesh):
+    """Teacher-forced multi-position KV write through the draft model —
+    keeps the draft pool current across plain-decode fallback windows, so
+    the accept rate recovers instead of decaying after every fallback."""
+    kern = runtime.use_paged_kernel()
+    key = ("sync", cfg_d, pc_d, None if mesh is None else id(mesh), kern)
+    if key in _JIT_CACHE:
+        _JIT_CACHE.move_to_end(key)
+        return _JIT_CACHE[key]
+
+    def _sync(params, tokens, cache, table, ctx, active):
+        _, cache = runtime.paged_verify(params, cfg_d, pc_d, tokens,
+                                        cache, table, ctx, active, mesh,
+                                        kern)
+        return cache
+
+    return _jit_cache_put(key, jax.jit(_sync, donate_argnums=(2,)))
 
 
 class Server:
     def __init__(self, params, cfg: ModelConfig,
                  pc: Optional[pcache.PagedConfig] = None,
                  max_concurrency: int = 8, mesh=None,
-                 calib_tokens=None, max_decode_window: int = 16):
+                 calib_tokens=None, max_decode_window: int = 16,
+                 draft_params=None, draft_cfg: Optional[ModelConfig] = None,
+                 draft_pc: Optional[pcache.PagedConfig] = None,
+                 spec_k: int = 0):
         runtime.check_supported(cfg)
         self.params = params
         self.cfg = cfg
@@ -90,11 +172,11 @@ class Server:
         self.mesh = mesh
         self.scheduler = Scheduler(self.pc, max_concurrency)
         self.cache = pcache.init_paged_cache(cfg, self.pc)
+        if calib_tokens is None:
+            calib_tokens = jax.random.randint(
+                jax.random.PRNGKey(0),
+                (2, min(64, self.pc.max_len)), 0, cfg.vocab_size)
         if self.pc.cur_kv:
-            if calib_tokens is None:
-                calib_tokens = jax.random.randint(
-                    jax.random.PRNGKey(0),
-                    (2, min(64, self.pc.max_len)), 0, cfg.vocab_size)
             self.cache = runtime.calibrate_kv(
                 params, cfg, self.pc, self.cache, calib_tokens)
 
@@ -104,6 +186,37 @@ class Server:
         self._prefill, self._decode, self._decode_scan = _jitted_steps(
             cfg, self.pc, mesh)
         self.max_decode_window = max_decode_window
+
+        # --- speculative decoding (draft-k / verify-1) ----------------
+        self.spec_k = int(spec_k) if draft_params is not None else 0
+        self.draft_params = draft_params
+        self.draft_cfg = draft_cfg or (cfg if draft_params is not None
+                                       else None)
+        self.draft_pc = None
+        self.draft_cache = None
+        if self.spec_k > 0:
+            runtime.check_supported(self.draft_cfg)
+            # one block table indexes both pools: the draft pool MUST
+            # share the target's block geometry (its per-block payload —
+            # kv heads, rank — may differ freely)
+            base_pc = draft_pc or self.pc
+            self.draft_pc = dataclasses.replace(
+                base_pc, block_size=self.pc.block_size,
+                n_blocks=self.pc.n_blocks,
+                max_blocks_per_seq=self.pc.max_blocks_per_seq)
+            self.draft_cache = pcache.init_paged_cache(
+                self.draft_cfg, self.draft_pc)
+            if self.draft_pc.cur_kv:
+                self.draft_cache = runtime.calibrate_kv(
+                    self.draft_params, self.draft_cfg, self.draft_pc,
+                    self.draft_cache, calib_tokens)
+            self._draft_prefill, _, _ = _jitted_steps(
+                self.draft_cfg, self.draft_pc, mesh)
+            self._spec_draft, self._spec_verify, self._spec_copy = \
+                _jitted_spec_steps(cfg, self.pc, self.draft_cfg,
+                                   self.draft_pc, self.spec_k, mesh)
+            self._draft_sync = _jitted_draft_sync(
+                self.draft_cfg, self.draft_pc, mesh)
 
         self._next_rid = 0
         self._packed_sig = None       # slot-occupancy signature
@@ -123,6 +236,14 @@ class Server:
         self.decode_time_s = 0.0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        # speculative split: draft vs verify device time, and the
+        # model-level accept rate (accepted draft tokens / proposed)
+        self.n_spec_windows = 0
+        self.n_spec_fallbacks = 0
+        self.spec_tokens_proposed = 0
+        self.spec_tokens_accepted = 0
+        self.spec_draft_time_s = 0.0
+        self.spec_verify_time_s = 0.0
 
     # -- request lifecycle ---------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -227,6 +348,13 @@ class Server:
         logits, self.cache = self._prefill(
             self.params, jnp.asarray(tokens), jnp.asarray(lengths),
             self.cache, jnp.asarray(table))
+        if self.spec_k:
+            # the draft shares the block table, so its pool must hold the
+            # same prefix KV the target's does
+            _, self.draft_cache = self._draft_prefill(
+                self.draft_params, jnp.asarray(tokens),
+                jnp.asarray(lengths), self.draft_cache,
+                jnp.asarray(table))
         toks, lps = self._sample_batch(
             logits, lambda s: len(s.req.out_tokens))
         t_now = time.perf_counter()
@@ -267,11 +395,16 @@ class Server:
         for i, slot in enumerate(sched.slots):
             if slot is not None:
                 next_toks[i, 0] = slot.next_token
+        table = jnp.asarray(sched.block_table())
+        ctx = jnp.asarray(sched.ctx_lens())
+        active = jnp.asarray(sched.active_mask())
         logits, self.cache = self._decode(
             self.params, jnp.asarray(next_toks), self.cache,
-            jnp.asarray(sched.block_table()),
-            jnp.asarray(sched.ctx_lens()),
-            jnp.asarray(sched.active_mask()))
+            table, ctx, active)
+        if self.spec_k:
+            self.draft_cache = self._draft_sync(
+                self.draft_params, jnp.asarray(next_toks),
+                self.draft_cache, table, ctx, active)
         toks, lps = self._sample_batch(
             logits, lambda s: len(s.req.out_tokens))
         t_now = time.perf_counter()
@@ -285,8 +418,94 @@ class Server:
             self._maybe_retire(i, t_now)
         self.n_decode_steps += 1
 
+    def _run_spec_decode(self) -> bool:
+        """One draft-k/verify-1 window over all running slots. Returns
+        False (without touching any device state) when the pool cannot
+        fork the window — the caller falls back to plain decode, so
+        speculation never causes a preemption."""
+        sched = self.scheduler
+        k = self.spec_k
+        fork = sched.fork_for_spec(k)
+        if fork is None:
+            self.n_spec_fallbacks += 1
+            return False
+        B = sched.max_concurrency
+        spec_table = np.full((B, self.pc.max_blocks_per_seq), -1,
+                             np.int32)
+        for i, blocks in fork.tables.items():
+            spec_table[i, :len(blocks)] = blocks
+        if fork.copies:
+            # boundary-block CoW copies: ≤ 1 per slot, padded with the
+            # drop sentinel (dst = n_blocks) to a fixed shape
+            src = np.full((B,), self.pc.n_blocks, np.int32)
+            dst = np.full((B,), self.pc.n_blocks, np.int32)
+            for m, (s, d) in enumerate(fork.copies):
+                src[m], dst[m] = s, d
+            src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
+            self.cache = self._spec_copy(self.cache, src_j, dst_j)
+            self.draft_cache = self._spec_copy(self.draft_cache,
+                                               src_j, dst_j)
+
+        next_toks = np.zeros((B, 1), np.int32)
+        gen_starts = np.zeros((B,), np.int32)
+        for i, slot in enumerate(sched.slots):
+            if slot is not None:
+                next_toks[i, 0] = slot.next_token
+                gen_starts[i] = len(slot.req.out_tokens)
+        table_j = jnp.asarray(spec_table)
+        ctx = jnp.asarray(sched.ctx_lens())
+        active = jnp.asarray(sched.active_mask())
+        self._refresh_packed()
+        greedy = all(sp is None or sp.temperature <= 0.0
+                     for sp in self._slot_sampling())
+
+        t0 = time.perf_counter()
+        d_toks, d_probs, self.draft_cache = self._spec_draft(
+            self.draft_params, jnp.asarray(next_toks), self.draft_cache,
+            table_j, ctx, active, self._base_keys,
+            jnp.asarray(gen_starts), *self._packed, greedy=greedy)
+        jax.block_until_ready(d_toks)
+        t1 = time.perf_counter()
+        self.spec_draft_time_s += t1 - t0
+
+        ver_in = jnp.concatenate([jnp.asarray(next_toks), d_toks], axis=1)
+        emitted, n_emit, lps, self.cache = self._spec_verify(
+            self.params, ver_in, d_toks, d_probs, self.cache, table_j,
+            ctx, active, self._base_keys, jnp.asarray(gen_starts),
+            *self._packed, greedy=greedy)
+        emitted, n_emit, lps = jax.device_get((emitted, n_emit, lps))
+        self.spec_verify_time_s += time.perf_counter() - t1
+
+        t_now = time.perf_counter()
+        for i in list(sched.active_slots):
+            slot = sched.slots[i]
+            req = slot.req
+            take = min(int(n_emit[i]),
+                       req.max_new_tokens - len(req.out_tokens))
+            row = [int(t) for t in emitted[i, :take]]
+            if req.eos_id is not None and req.eos_id in row:
+                # unlike scan windows (which force single-stepping), a
+                # spec window can truncate at eos on the host: tokens
+                # past it are simply never committed
+                row = row[:row.index(req.eos_id) + 1]
+                take = len(row)
+            req.out_tokens.extend(row)
+            req.out_logprobs.extend(float(lps[i, t])
+                                    for t in range(take))
+            sched.commit_spec(i, fork.tables[i], take)
+            slot.next_token = req.out_tokens[-1]
+            self.tokens_generated += take
+            self.spec_tokens_proposed += k
+            self.spec_tokens_accepted += int(n_emit[i]) - 1
+            self._maybe_retire(i, t_now)
+        self.n_spec_windows += 1
+        self.n_decode_steps += 1
+        return True
+
     def _run_decode(self, now: float) -> None:
         sched = self.scheduler
+        if self.spec_k and self._run_spec_decode():
+            return
         k = self._decode_window()
         remaining = {i: sched.slots[i].req.max_new_tokens
                      - len(sched.slots[i].req.out_tokens)
@@ -319,6 +538,17 @@ class Server:
             jnp.asarray(gen_starts), *self._packed, n_steps=k,
             greedy=greedy)
         toks_seq, lps_seq = jax.device_get((toks_seq, lps_seq))
+        if self.spec_k:
+            # teacher-force the window's input tokens through the draft
+            # so its pool stays current for the next speculative window
+            # (rows that froze mid-scan write past their committed
+            # context — dead positions, overwritten later)
+            sync_in = np.concatenate(
+                [next_toks, np.asarray(toks_seq[:k - 1]).T], axis=1)
+            self.draft_cache = self._draft_sync(
+                self.draft_params, jnp.asarray(sync_in),
+                self.draft_cache, jnp.asarray(table), jnp.asarray(ctx),
+                jnp.asarray(active))
         t_now = time.perf_counter()
         actives = list(sched.active_slots)
         for i in actives:
@@ -391,4 +621,12 @@ class Server:
             "gathered_bytes_per_step": runtime.gathered_bytes_per_step(
                 self.cfg, self.pc, self.scheduler.max_concurrency,
                 kernel=self._paged_kernel),
+            "spec_k": self.spec_k,
+            "n_spec_windows": self.n_spec_windows,
+            "n_spec_fallbacks": self.n_spec_fallbacks,
+            "spec_accept_rate": (
+                self.spec_tokens_accepted / self.spec_tokens_proposed
+                if self.spec_tokens_proposed else 0.0),
+            "spec_draft_time_s": self.spec_draft_time_s,
+            "spec_verify_time_s": self.spec_verify_time_s,
         }

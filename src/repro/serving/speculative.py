@@ -1,0 +1,216 @@
+"""Self-drafted speculative decoding: draft-k / verify-1 over forked
+paged blocks.
+
+CURing makes the draft model free: ``launch/cure.py --emit-draft``
+compresses the SAME checkpoint to an aggressive parameter budget, and
+module-level low-rank compression preserves local token distributions
+well enough that the draft agrees with the target on most easy tokens.
+Each speculative window then:
+
+  1. **drafts** k tokens autoregressively with the cheap model, writing
+     their K/V into *forked* block tables (the PR 2 refcounted
+     fork/copy-on-write machinery) so the parent's blocks are never
+     touched;
+  2. **verifies** all k+1 positions with ONE target forward
+     (``runtime.paged_verify`` — per-row math bit-identical to k+1
+     sequential decode steps, pool read shared across positions);
+  3. **accepts** a prefix and emits ``a + 1`` tokens: the ``a`` agreeing
+     draft tokens plus a correction/bonus token. The scheduler commits
+     the forked blocks for accepted positions back to the parent table
+     and frees the rest.
+
+Acceptance is distribution-exact:
+
+  - greedy rows (temperature <= 0) use the token-match fast path —
+    accept ``d_j`` iff it equals the target argmax, correct with the
+    argmax on the first miss. Because ``paged_verify`` is bit-identical
+    to sequential ``paged_decode``, the emitted stream is *identical* to
+    non-speculative greedy decoding, token for token.
+  - sampling rows use standard speculative rejection sampling (Leviathan
+    et al. 2023; Chen et al. 2023): accept ``d_j`` with probability
+    ``min(1, q(d_j) / p(d_j))`` where q/p are the **filtered** target /
+    draft distributions (``sampling._filtered_logits`` — the exact
+    temperature/top-k/top-p machinery the non-speculative sampler
+    applies), resample the first rejection from the residual
+    ``normalize(max(q - p, 0))``. The emitted marginal at every position
+    is exactly ``q`` — the same distribution non-speculative decoding
+    samples from.
+
+PRNG streams are deterministic per (seed, rid, generated-token index):
+draft, accept, and resample draws each fold a distinct tag into the
+request's ``fold_in(PRNGKey(seed), rid)`` base key, then the window's
+start index and the in-window position — disjoint from the plain decode
+stream (which folds the bare step index), reproducible across
+preemption/restore, and independent of batch composition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import runtime
+from repro.serving.sampling import _filtered_logits
+
+# Distinct fold_in tags keep the three speculative draw streams disjoint
+# from each other and from the non-speculative stream (bare step index,
+# always < 2**24 in practice).
+TAG_DRAFT = 0x5D_D1AF
+TAG_ACCEPT = 0x5D_ACC9
+TAG_RESAMPLE = 0x5D_4E5A
+
+
+def early_exit_draft(params, cfg, n_layers: int):
+    """Draft = the target's own first ``n_layers`` blocks plus its
+    embedding/final-norm/head — a zero-training self-draft (Draft &
+    Verify-style layer early exit). The sliced tree shares the target's
+    arrays, so the draft costs no extra parameter memory; only its KV
+    pool is new. Returns ``(draft_params, draft_cfg)`` for
+    ``Server(draft_params=..., draft_cfg=...)``.
+
+    Verification makes ANY draft output-exact, so the only question a
+    draft choice answers is the accept rate it buys per unit of draft
+    compute; the layer prefix is a strong default because early blocks
+    carry most of the next-token signal on easy tokens."""
+    if len(cfg.groups) != 1:
+        raise ValueError(
+            "early_exit_draft supports single-group (uniform-stack) "
+            f"configs; {cfg.name} has {len(cfg.groups)} groups")
+    spec, count = cfg.groups[0]
+    n = min(int(n_layers), int(count))
+    if n < 1:
+        raise ValueError(f"early_exit_draft needs >= 1 layer, got {n}")
+    dcfg = cfg.replace(name=f"{cfg.name}-ee{n}", n_layers=n,
+                       groups=((spec, n),))
+    draft = dict(params)
+    draft["groups"] = [[jax.tree.map(lambda x: x[:n], blk)
+                        for blk in params["groups"][0]]]
+    return draft, dcfg
+
+
+def _fold3(base, tag: int, a, b):
+    k = jax.random.fold_in(base, tag)
+    k = jax.random.fold_in(k, a)
+    return jax.random.fold_in(k, b)
+
+
+def _draft_keys(base_keys, gen_starts, j):
+    """(B, 2) keys for the j-th in-window draft draw."""
+    return jax.vmap(lambda bk, g: _fold3(bk, TAG_DRAFT, g, j))(
+        base_keys, gen_starts)
+
+
+def _accept_uniforms(base_keys, gen_starts, k: int):
+    """(B, k) U(0,1) draws for the accept tests."""
+    def one(bk, g):
+        return jax.vmap(lambda j: jax.random.uniform(
+            _fold3(bk, TAG_ACCEPT, g, j)))(jnp.arange(k))
+    return jax.vmap(one)(base_keys, gen_starts)
+
+
+def draft_tokens(params, cfg, pc, tokens, cache, table, ctx, active,
+                 base_keys, gen_starts, temps, top_ks, top_ps,
+                 k: int, mesh=None, greedy: bool = False, kernel=None):
+    """k autoregressive draft steps through the forked tables.
+
+    tokens (B, 1): each slot's pending next token. Returns
+    ``(d_toks (B, k), d_probs, cache)`` — ``d_probs`` is the (B, k, V)
+    *filtered* draft distribution at each step (what the accept test
+    divides by), or None under static ``greedy`` (token-match
+    verification never reads it)."""
+    def body(carry, j):
+        toks, c, cx = carry
+        logits, c = runtime.paged_decode(params, cfg, pc, toks, c, table,
+                                         cx, active, mesh, kernel)
+        lg = logits.astype(jnp.float32)
+        if greedy:
+            s_toks = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            out = (s_toks,)
+        else:
+            flt = jax.vmap(_filtered_logits)(lg, temps, top_ks, top_ps)
+            keys = _draft_keys(base_keys, gen_starts, j)
+            smp = jax.vmap(jax.random.categorical)(keys, flt)
+            s_toks = jnp.where(temps <= 0.0,
+                               jnp.argmax(lg, axis=-1),
+                               smp).astype(jnp.int32)
+            out = (s_toks, jax.nn.softmax(flt, axis=-1))
+        return (s_toks[:, None], c, cx + 1), out
+
+    (last, cache, cx), outs = jax.lax.scan(
+        body, (tokens, cache, ctx), jnp.arange(k))
+    d_toks = outs[0].T                                     # (B, k)
+    d_probs = None if greedy else jnp.swapaxes(outs[1], 0, 1)
+    # one extra KV-only step: the scan wrote positions ctx .. ctx+k-1,
+    # but a fully accepted window commits through ctx+k — without d_k's
+    # KV here, the NEXT window drafts against a stale position and the
+    # accept rate collapses. When the window is partially accepted the
+    # write lands past the committed context (dead, overwritten later).
+    _, cache = runtime.paged_decode(params, cfg, pc, last, cache, table,
+                                    cx, active, mesh, kernel)
+    return d_toks, d_probs, cache
+
+
+def verify_tokens(params, cfg, pc, tokens, d_toks, d_probs, cache, table,
+                  ctx, active, base_keys, gen_starts, temps, top_ks,
+                  top_ps, mesh=None, greedy: bool = False, kernel=None):
+    """Single-forward verification of a drafted window.
+
+    tokens (B, k+1): ``[next_token, d_1 .. d_k]`` — the verify-forward
+    inputs; d_toks (B, k) the draft proposals; d_probs (B, k, V) the
+    filtered draft distributions (None under static ``greedy``).
+    Returns ``(emitted (B, k+1), n_emit (B,), lps (B, k+1), cache)``:
+    row i's emitted tokens are ``emitted[i, :n_emit[i]]`` (``a`` accepted
+    draft tokens + 1 correction/bonus; entries past ``n_emit`` are
+    stale), ``lps`` their untempered-target logprobs — the host commits
+    a prefix of this and the matching forked blocks."""
+    B, S = tokens.shape
+    k = S - 1
+    logits, cache = runtime.paged_verify(params, cfg, pc, tokens, cache,
+                                         table, ctx, active, mesh, kernel)
+    lg = logits.astype(jnp.float32)                        # (B, k+1, V)
+    logp = jax.nn.log_softmax(lg)
+    gr_toks = jnp.argmax(lg, axis=-1).astype(jnp.int32)    # (B, k+1)
+
+    if greedy:
+        acc = d_toks == gr_toks[:, :k]
+        a = jnp.cumprod(acc.astype(jnp.int32), axis=1).sum(axis=1)
+        corr = jnp.take_along_axis(gr_toks, a[:, None], axis=1)[:, 0]
+    else:
+        flt = jax.vmap(jax.vmap(_filtered_logits,
+                                in_axes=(0, None, None, None)))(
+            lg, temps, top_ks, top_ps)
+        p_t = jax.nn.softmax(flt, axis=-1)                 # (B, k+1, V)
+        # pad the draft distribution with a zeros row so the a == k
+        # bonus draw is the same residual formula: max(q - 0, 0) = q
+        p_d = jnp.concatenate(
+            [d_probs, jnp.zeros_like(d_probs[:, :1])], axis=1)
+        p_t_at = jnp.take_along_axis(
+            p_t[:, :k], d_toks[..., None], axis=-1)[..., 0]
+        p_d_at = jnp.take_along_axis(
+            d_probs, d_toks[..., None], axis=-1)[..., 0]
+        u = _accept_uniforms(base_keys, gen_starts, k)
+        acc_s = u * p_d_at <= p_t_at
+        acc_g = d_toks == gr_toks[:, :k]
+        acc = jnp.where((temps <= 0.0)[:, None], acc_g, acc_s)
+        a = jnp.cumprod(acc.astype(jnp.int32), axis=1).sum(axis=1)
+        q_a = jnp.take_along_axis(p_t, a[:, None, None], axis=1)[:, 0]
+        p_a = jnp.take_along_axis(p_d, a[:, None, None], axis=1)[:, 0]
+        res = jnp.maximum(q_a - p_a, 0.0)                  # (B, V)
+        # a true rejection guarantees positive residual mass
+        # (sum(min(p, q)) < 1) and a == k leaves res = q; the argmax
+        # fallback only guards fp-exact q == p corners
+        res_l = jnp.where(res > 0.0, jnp.log(res), -jnp.inf)
+        res_tok = jax.vmap(
+            lambda bk, g, aa, rl: jax.random.categorical(
+                _fold3(bk, TAG_RESAMPLE, g, aa), rl))(
+            base_keys, gen_starts, a, res_l)
+        corr_s = jnp.where((res > 0.0).any(axis=-1), res_tok,
+                           jnp.argmax(q_a, axis=-1)).astype(jnp.int32)
+        corr_g = jnp.take_along_axis(gr_toks, a[:, None], axis=1)[:, 0]
+        corr = jnp.where(temps <= 0.0, corr_g, corr_s)
+
+    emitted = jnp.concatenate(
+        [d_toks, jnp.zeros((B, 1), jnp.int32)], axis=1)    # (B, k+1)
+    emitted = jnp.where(
+        jnp.arange(k + 1)[None] == a[:, None], corr[:, None], emitted)
+    lps = jnp.take_along_axis(logp, emitted[..., None], axis=-1)[..., 0]
+    return emitted, a + 1, lps, cache

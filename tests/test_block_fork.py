@@ -1,0 +1,141 @@
+"""Property tests for the refcounted block pool under speculative
+forking: interleaved alloc / fork / copy_on_write / free sequences (and
+scheduler-level fork_for_spec / commit_spec / abort_spec windows) must
+never double-free, never lose a block, and always return the pool to
+fully-free once every reference is dropped. Runs under real hypothesis
+when installed, else the conftest seeded-sweep stub (tier-1, CPU)."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _check_conservation(alloc: BlockAllocator, lists):
+    """Pool invariants that must hold after EVERY operation."""
+    held = {}
+    for blocks in lists:
+        for b in blocks:
+            held[b] = held.get(b, 0) + 1
+    # every reference we hold is a live allocation with that exact count
+    assert held == alloc._ref, (held, alloc._ref)
+    # no block is both free and allocated; none has vanished
+    free = set(alloc._free)
+    assert len(free) == alloc.n_free
+    assert free.isdisjoint(held)
+    assert len(free) + len(held) == alloc.n_blocks
+
+
+@given(seed=st.integers(0, 10_000), n_blocks=st.integers(1, 24),
+       n_ops=st.integers(1, 120))
+@settings(max_examples=30)
+def test_allocator_interleaved_ops_never_leak(seed, n_blocks, n_ops):
+    rng = random.Random(seed)
+    alloc = BlockAllocator(n_blocks)
+    lists = []          # every block list we hold a reference through
+    for _ in range(n_ops):
+        op = rng.choice(["alloc", "fork", "cow", "free"])
+        if op == "alloc":
+            got = alloc.alloc(rng.randint(0, max(1, n_blocks // 2)))
+            if got is not None:
+                lists.append(got)
+        elif op == "fork" and lists:
+            lists.append(alloc.fork(rng.choice(lists)))
+        elif op == "cow" and lists:
+            blocks = rng.choice(lists)
+            if blocks:
+                j = rng.randrange(len(blocks))
+                nb = alloc.copy_on_write(blocks[j])
+                if nb is not None:
+                    # our reference moved to the private block; the
+                    # shared ref was already dropped by copy_on_write
+                    blocks[j] = nb
+        elif op == "free" and lists:
+            alloc.free(lists.pop(rng.randrange(len(lists))))
+        _check_conservation(alloc, lists)
+    while lists:
+        alloc.free(lists.pop())
+        _check_conservation(alloc, lists)
+    assert alloc.n_free == n_blocks
+    assert not alloc._ref
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20)
+def test_scheduler_spec_windows_return_every_block(seed):
+    """Random fork -> (commit | abort) speculative windows interleaved
+    with decode-block growth and retirement: once every request is
+    retired the pool must be exactly full again, and a slot's committed
+    list must always cover its context."""
+    rng = random.Random(seed)
+    pc = PagedConfig(block_size=4, n_blocks=24, max_blocks_per_seq=8)
+    sched = Scheduler(pc, max_concurrency=3)
+    for rid in range(5):
+        sched.add(Request(rid=rid,
+                          prompt=[1] * rng.randint(1, 10),
+                          max_new_tokens=rng.randint(1, 8),
+                          sampling=SamplingParams()))
+    sched.plan()                      # admit into free slots
+    for _ in range(40):
+        if not sched.active_slots:
+            if sched.plan().kind != "prefill":
+                break
+            continue
+        op = rng.choice(["spec", "spec", "decode", "retire"])
+        if op == "spec":
+            k = rng.randint(1, 6)
+            fork = sched.fork_for_spec(k)
+            if fork is None:
+                continue              # pool-dry fallback: nothing held
+            if rng.random() < 0.25:
+                sched.abort_spec(fork)
+            else:
+                for i in list(fork.tables):
+                    take = rng.randint(0, k + 1)
+                    slot = sched.slots[i]
+                    take = min(take, pc.max_len - 2 - slot.ctx_len)
+                    sched.commit_spec(i, fork.tables[i], max(0, take))
+        elif op == "decode":
+            i = rng.choice(sched.active_slots)
+            slot = sched.slots[i]
+            if slot.ctx_len + 1 < pc.max_len:
+                sched.ensure_decode_blocks(per_slot={i: 1})
+                if sched.slots[i] is not None:
+                    sched.slots[i].ctx_len += 1
+        else:
+            sched.retire(rng.choice(sched.active_slots))
+        for i in sched.active_slots:
+            slot = sched.slots[i]
+            assert len(slot.blocks) * pc.block_size >= slot.ctx_len
+            for b in slot.blocks:
+                assert sched.alloc.ref(b) >= 1
+    for i in list(sched.active_slots):
+        sched.retire(i)
+    assert sched.alloc.n_free == pc.n_blocks
+    assert not sched.alloc._ref
+
+
+def test_allocator_double_free_raises():
+    alloc = BlockAllocator(4)
+    blocks = alloc.alloc(2)
+    alloc.free(blocks)
+    try:
+        alloc.free(blocks)
+    except ValueError as e:
+        assert "double free" in str(e)
+    else:
+        raise AssertionError("double free not detected")
+
+
+def test_fork_of_freed_block_raises():
+    alloc = BlockAllocator(4)
+    blocks = alloc.alloc(1)
+    alloc.free(blocks)
+    try:
+        alloc.fork(blocks)
+    except ValueError as e:
+        assert "unallocated" in str(e)
+    else:
+        raise AssertionError("fork of freed block not detected")

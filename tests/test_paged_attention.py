@@ -134,6 +134,48 @@ def test_kernel_scan_safe():
         _assert_close(ys[t], refs[t])
 
 
+@pytest.mark.parametrize("B,K,G,r,nb,bs,maxb,win,span", [
+    (3, 2, 2, 16, 16, 4, 7, 0, 4),    # GQA, ragged ctx
+    (2, 1, 4, 8, 12, 8, 4, 0, 2),     # MQA
+    (3, 2, 3, 16, 16, 4, 7, 5, 3),    # sliding window
+])
+def test_q_span_matches_sequential(B, K, G, r, nb, bs, maxb, win, span):
+    """The multi-position verify layout — (span*G) query rows sharing one
+    pool gather, row g' masked to position ctx + g'//G — must be
+    BIT-identical per position to span sequential single-position calls
+    (each row's attended set and reduction order are unchanged). This is
+    what makes speculative verify exact vs step-by-step decode."""
+    q, kp, vp, table, ctx = _case(B, K, span * G, r, nb, bs, maxb,
+                                  inactive_last=False)
+    # leave room for span positions past ctx inside the assigned blocks
+    ctx = jnp.minimum(ctx, (table >= 0).sum(1) * bs - span)
+    ctx = jnp.maximum(ctx, 0)
+    y = paged_attention_ref(q, kp, vp, table, ctx, window=win,
+                            q_span=span)
+    yk = paged_attention_op(q, kp, vp, table, ctx, window=win,
+                            q_span=span)
+    for s in range(span):
+        qs = q[:, :, s * G:(s + 1) * G]
+        ys = paged_attention_ref(qs, kp, vp, table, ctx + s, window=win)
+        np.testing.assert_array_equal(
+            np.asarray(y[:, :, s * G:(s + 1) * G]), np.asarray(ys))
+        _assert_close(yk[:, :, s * G:(s + 1) * G], ys)
+
+
+def test_q_span_one_is_plain_path():
+    """q_span=1 must be the unchanged single-position code path."""
+    q, kp, vp, table, ctx = _case(3, 2, 2, 16, 12, 4, 5)
+    y0 = paged_attention_ref(q, kp, vp, table, ctx)
+    y1 = paged_attention_ref(q, kp, vp, table, ctx, q_span=1)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_q_span_must_divide_groups():
+    q, kp, vp, table, ctx = _case(2, 2, 6, 8, 8, 4, 4)
+    with pytest.raises(ValueError, match="q_span"):
+        paged_attention_op(q, kp, vp, table, ctx, q_span=4)
+
+
 def test_kernel_shape_mismatch_raises():
     q = jnp.zeros((2, 2, 2, 8))
     kp = jnp.zeros((4, 4, 2, 8))

@@ -1,0 +1,373 @@
+"""Speculative decoding (draft-k/verify-1): multi-position verify parity
+vs sequential decode, greedy bit-identity of the served output with
+speculation on vs off, distribution-exactness of rejection sampling at
+temperature > 0 (chi-square against the target's filtered single-step
+distribution), CoW fork/commit block accounting, and the LRU-bounded jit
+cache (tier-1, CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_repro
+from repro.models import init_params
+from repro.serving import paged_cache as pcache
+from repro.serving import runtime
+from repro.serving import server as srvmod
+from repro.serving import speculative as spd
+from repro.serving.sampling import (
+    SamplingParams, _filtered_logits, batch_base_keys)
+from repro.serving.server import Server, clear_jit_cache
+
+
+def _pc(cur_kv=False, **kw):
+    kw.setdefault("block_size", 8)
+    kw.setdefault("n_blocks", 96)
+    kw.setdefault("max_blocks_per_seq", 16)
+    return pcache.PagedConfig(cur_kv=cur_kv,
+                              kv_rank=8 if cur_kv else 0, **kw)
+
+
+@pytest.fixture(scope="module")
+def draft_params(tiny_cfg):
+    """A disagreeing draft: same arch, different init."""
+    return init_params(jax.random.PRNGKey(7), tiny_cfg)
+
+
+def _prefilled(params, cfg, pc, lens, headroom=8, seed=3, same=False):
+    """Prefill ragged prompts; returns (cache, table, ctx, next_tok).
+    ``same=True`` gives every row one identical prompt (the chi-square
+    test needs iid rows sharing a single target distribution)."""
+    B = len(lens)
+    table = np.full((B, pc.max_blocks_per_seq), -1, np.int32)
+    nxt = 0
+    for i, n in enumerate(lens):
+        nb = pc.blocks_for(n + headroom)
+        table[i, :nb] = np.arange(nxt, nxt + nb)
+        nxt += nb
+    assert nxt <= pc.n_blocks
+    S = int(max(lens)) + 2
+    rng = np.random.RandomState(seed)
+    toks = np.zeros((B, S), np.int32)
+    one = rng.randint(0, cfg.vocab_size, max(lens))
+    for i, n in enumerate(lens):
+        toks[i, :n] = one[:n] if same else rng.randint(
+            0, cfg.vocab_size, n)
+    cache = pcache.init_paged_cache(cfg, pc)
+    if pc.cur_kv:
+        calib = jax.random.randint(jax.random.PRNGKey(9), (2, 32), 0,
+                                   cfg.vocab_size)
+        cache = runtime.calibrate_kv(params, cfg, pc, cache, calib)
+    lens_j = jnp.asarray(np.asarray(lens, np.int32))
+    logits, cache = runtime.paged_prefill(
+        params, cfg, pc, jnp.asarray(toks), lens_j, cache,
+        jnp.asarray(table))
+    nt = np.asarray(jnp.argmax(logits, -1), np.int32)
+    return cache, jnp.asarray(table), lens_j, nt
+
+
+def _greedy_ref(params, cfg, pc, cache, table, ctx, next_tok, steps):
+    """Sequential greedy paged_decode stream (the exactness oracle)."""
+    B = ctx.shape[0]
+    active = jnp.ones((B,), bool)
+    c = jax.tree.map(lambda x: x, cache)
+    t = jnp.asarray(next_tok[:, None])
+    cx = ctx
+    out = []
+    for _ in range(steps):
+        lg, c = runtime.paged_decode(params, cfg, pc, t, c, table, cx,
+                                     active)
+        t = jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(t[:, 0]))
+        cx = cx + 1
+    return np.stack(out, 1)
+
+
+# ---------------------------------------------------------------------------
+# verify parity: one forward == k+1 sequential steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cur_kv", [False, True])
+def test_paged_verify_bit_identical_to_sequential(tiny_cfg, tiny_params,
+                                                  cur_kv):
+    cfg, params = tiny_cfg, tiny_params
+    pc = _pc(cur_kv)
+    cache, table, ctx, nt = _prefilled(params, cfg, pc, [11, 7, 14])
+    B, S = len(ctx), 4
+    active = jnp.ones((B,), bool)
+    # reference: S sequential decode steps over a teacher-forced window
+    rng = np.random.RandomState(5)
+    win = np.concatenate(
+        [nt[:, None], rng.randint(0, cfg.vocab_size, (B, S - 1))],
+        axis=1).astype(np.int32)
+    ref_cache = jax.tree.map(lambda x: x, cache)
+    refs = []
+    for j in range(S):
+        lg, ref_cache = runtime.paged_decode(
+            params, cfg, pc, jnp.asarray(win[:, j:j + 1]), ref_cache,
+            table, ctx + j, active)
+        refs.append(np.asarray(lg))
+    logits, vcache = runtime.paged_verify(
+        params, cfg, pc, jnp.asarray(win), cache, table, ctx, active)
+    for j in range(S):
+        np.testing.assert_array_equal(np.asarray(logits[:, j]), refs[j])
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(vcache[name]),
+                                      np.asarray(ref_cache[name]))
+
+
+# ---------------------------------------------------------------------------
+# draft/verify acceptance semantics
+# ---------------------------------------------------------------------------
+
+def test_self_draft_greedy_accepts_everything(tiny_cfg, tiny_params):
+    cfg, params = tiny_cfg, tiny_params
+    pc = _pc()
+    k = 4
+    cache, table, ctx, nt = _prefilled(params, cfg, pc, [11, 7, 14])
+    B = len(ctx)
+    active = jnp.ones((B,), bool)
+    keys = batch_base_keys(jnp.arange(B, dtype=jnp.int32),
+                           jnp.arange(B, dtype=jnp.int32))
+    gs = jnp.ones((B,), jnp.int32)
+    zeros = (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+             jnp.ones((B,), jnp.float32))
+    ref = _greedy_ref(params, cfg, pc, cache, table, ctx, nt, k + 1)
+    d_toks, d_probs, dcache = spd.draft_tokens(
+        params, cfg, pc, jnp.asarray(nt[:, None]),
+        jax.tree.map(lambda x: x, cache), table, ctx, active, keys, gs,
+        *zeros, k, greedy=True)
+    assert d_probs is None
+    np.testing.assert_array_equal(np.asarray(d_toks), ref[:, :k])
+    ver = jnp.concatenate([jnp.asarray(nt[:, None]), d_toks], 1)
+    emitted, n_emit, lps, _ = spd.verify_tokens(
+        params, cfg, pc, ver, d_toks, None, cache, table, ctx, active,
+        keys, gs, *zeros, greedy=True)
+    assert (np.asarray(n_emit) == k + 1).all()
+    np.testing.assert_array_equal(np.asarray(emitted), ref)
+
+
+def test_wrong_draft_greedy_truncates_with_correction(tiny_cfg,
+                                                      tiny_params):
+    cfg, params = tiny_cfg, tiny_params
+    pc = _pc()
+    k = 4
+    cache, table, ctx, nt = _prefilled(params, cfg, pc, [11, 7, 14])
+    B = len(ctx)
+    active = jnp.ones((B,), bool)
+    keys = batch_base_keys(jnp.arange(B, dtype=jnp.int32),
+                           jnp.arange(B, dtype=jnp.int32))
+    gs = jnp.ones((B,), jnp.int32)
+    zeros = (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+             jnp.ones((B,), jnp.float32))
+    ref = _greedy_ref(params, cfg, pc, cache, table, ctx, nt, k + 1)
+    bad = ref[:, :k].copy()
+    bad[0, 2] = (bad[0, 2] + 1) % cfg.vocab_size   # reject at j=2
+    bad[2, 0] = (bad[2, 0] + 9) % cfg.vocab_size   # reject at j=0
+    emitted, n_emit, _, _ = spd.verify_tokens(
+        params, cfg, pc,
+        jnp.asarray(np.concatenate([nt[:, None], bad], 1)),
+        jnp.asarray(bad), None, cache, table, ctx, active, keys, gs,
+        *zeros, greedy=True)
+    emitted, n_emit = np.asarray(emitted), np.asarray(n_emit)
+    assert list(n_emit) == [3, k + 1, 1]
+    for i in range(3):
+        a = n_emit[i] - 1
+        np.testing.assert_array_equal(emitted[i, :a], bad[i, :a])
+        # the correction is the target's greedy continuation of the
+        # ACCEPTED prefix — which equals the sequential stream there
+        assert emitted[i, a] == ref[i, a]
+
+
+# ---------------------------------------------------------------------------
+# served output: speculation on == off (greedy, eos, fallback)
+# ---------------------------------------------------------------------------
+
+def _serve(cfg, params, pc, wl, *, spec_k=0, draft=None, draft_pc=None,
+           temp=0.0, eos=None, C=3):
+    srv = Server(params, cfg, pc=pc, max_concurrency=C,
+                 draft_params=draft, draft_pc=draft_pc, spec_k=spec_k)
+    for i, (p, mn) in enumerate(wl):
+        srv.submit(p, mn, sampling=SamplingParams(temperature=temp,
+                                                  seed=i),
+                   eos_id=eos)
+    done = srv.drain()
+    return srv, {r.rid: list(r.out_tokens) for r in done.values()}
+
+
+@pytest.fixture(scope="module")
+def workload(tiny_cfg):
+    rng = np.random.RandomState(0)
+    return [(list(rng.randint(0, tiny_cfg.vocab_size, rng.randint(6, 30))),
+             int(rng.randint(5, 24))) for _ in range(6)]
+
+
+@pytest.mark.parametrize("cur_kv", [False, True])
+def test_server_spec_greedy_bit_identity(tiny_cfg, tiny_params,
+                                         draft_params, workload, cur_kv):
+    """Spec on == spec off, token for token: the off path is the scan
+    window (paged_decode_scan), so this is the ISSUE's exactness bar. A
+    draft that DISAGREES must change nothing but the accept rate."""
+    cfg, params = tiny_cfg, tiny_params
+    pc = _pc(cur_kv)
+    _, base = _serve(cfg, params, pc, workload)
+    srv, out = _serve(cfg, params, pc, workload, spec_k=4, draft=params)
+    assert out == base
+    st = srv.stats()
+    assert st["n_spec_windows"] > 0
+    assert st["spec_accept_rate"] == 1.0
+    srv2, out2 = _serve(cfg, params, pc, workload, spec_k=4,
+                        draft=draft_params)
+    assert out2 == base
+    assert srv2.stats()["spec_accept_rate"] < 1.0
+
+
+def test_server_spec_draft_own_pool(tiny_cfg, tiny_params, workload):
+    """The draft may run its own CUR-KV pool over the shared table."""
+    cfg, params = tiny_cfg, tiny_params
+    pc = _pc(False)
+    _, base = _serve(cfg, params, pc, workload)
+    _, out = _serve(cfg, params, pc, workload, spec_k=3, draft=params,
+                    draft_pc=_pc(True))
+    assert out == base
+
+
+def test_server_spec_eos_truncation(tiny_cfg, tiny_params, workload):
+    cfg, params = tiny_cfg, tiny_params
+    pc = _pc()
+    _, base = _serve(cfg, params, pc, workload, eos=11)
+    _, out = _serve(cfg, params, pc, workload, spec_k=4, draft=params,
+                    eos=11)
+    assert out == base
+
+
+def test_server_spec_fallback_and_block_accounting(tiny_cfg, tiny_params,
+                                                   workload):
+    """A pool too small to fork falls back to plain decode (never
+    preempts from the spec path), output stays bit-identical, and every
+    block is returned once the queue drains."""
+    cfg, params = tiny_cfg, tiny_params
+    pc = _pc(block_size=4, n_blocks=18)
+    _, base = _serve(cfg, params, pc, workload, C=4)
+    srv, out = _serve(cfg, params, pc, workload, spec_k=6, draft=params,
+                      C=4)
+    assert out == base
+    st = srv.stats()
+    assert st["n_spec_fallbacks"] > 0
+    # the draft-KV sync keeps self-draft acceptance perfect across
+    # fallback windows
+    assert st["spec_accept_rate"] == 1.0
+    assert srv.scheduler.alloc.n_free == pc.n_blocks
+
+
+def test_server_spec_temperature_runs(tiny_cfg, tiny_params, draft_params,
+                                      workload):
+    cfg, params = tiny_cfg, tiny_params
+    srv, out = _serve(cfg, params, _pc(), workload, spec_k=4,
+                      draft=draft_params, temp=0.8)
+    assert len(out) == len(workload)
+    for r in srv.finished.values():
+        assert len(r.out_tokens) == len(r.out_logprobs)
+        assert all(np.isfinite(l) for l in r.out_logprobs)
+    assert srv.scheduler.alloc.n_free == srv.pc.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# distribution exactness at temperature > 0
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temp,top_k,top_p", [
+    (0.9, 0, 1.0),       # pure temperature
+    (1.2, 8, 0.85),      # nucleus + top-k filtering
+])
+def test_spec_sampling_matches_target_distribution(temp, top_k, top_p):
+    """Chi-square closeness: the marginal of the FIRST emitted token
+    under draft-then-verify (draft ~ p, accept u*p <= q, resample the
+    residual) must be the target's filtered single-step distribution q —
+    the very distribution non-speculative decoding samples from. Small
+    vocab so every bin gets real mass; many independent request keys via
+    distinct rids."""
+    cfg0 = get_repro()
+    cfg = cfg0.replace(
+        name="tiny-v31", d_model=32, n_layers=2, n_heads=2, n_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=31,
+        groups=((cfg0.groups[0][0], 2),), scan_layers=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    draft = init_params(jax.random.PRNGKey(5), cfg)
+    pc = pcache.PagedConfig(block_size=8, n_blocks=256,
+                            max_blocks_per_seq=4)
+    B, k, trials = 64, 3, 10
+    lens = [9] * B
+    cache, table, ctx, nt = _prefilled(params, cfg, pc, lens,
+                                       headroom=6, same=True)
+    dcache, _, _, _ = _prefilled(draft, cfg, pc, lens, headroom=6,
+                                 same=True)
+    active = jnp.ones((B,), bool)
+    gs = jnp.ones((B,), jnp.int32)
+    temps = jnp.full((B,), temp, jnp.float32)
+    top_ks = jnp.full((B,), top_k, jnp.int32)
+    top_ps = jnp.full((B,), top_p, jnp.float32)
+
+    # expected: q = softmax(filtered(target logits at the first verify
+    # position)) — identical for every row (identical prefixes)
+    lg0, _ = runtime.paged_decode(
+        params, cfg, pc, jnp.asarray(nt[:, None]),
+        jax.tree.map(lambda x: x, cache), table, ctx, active)
+    q = np.asarray(jax.nn.softmax(_filtered_logits(
+        lg0[0].astype(jnp.float32), temp, top_k, top_p)))
+
+    d_fn = jax.jit(lambda c, bk: spd.draft_tokens(
+        draft, cfg, pc, jnp.asarray(nt[:, None]), c, table, ctx, active,
+        bk, gs, temps, top_ks, top_ps, k))
+    v_fn = jax.jit(lambda dt, dp, c, bk: spd.verify_tokens(
+        params, cfg, pc,
+        jnp.concatenate([jnp.asarray(nt[:, None]), dt], 1), dt, dp, c,
+        table, ctx, active, bk, gs, temps, top_ks, top_ps))
+
+    counts = np.zeros((cfg.vocab_size,), np.int64)
+    for t in range(trials):
+        rids = jnp.arange(t * B, (t + 1) * B, dtype=jnp.int32)
+        bk = batch_base_keys(jnp.full((B,), 1, jnp.int32), rids)
+        d_toks, d_probs, dc = d_fn(jax.tree.map(lambda x: x, dcache), bk)
+        emitted, n_emit, _, _ = v_fn(
+            d_toks, d_probs, jax.tree.map(lambda x: x, cache), bk)
+        counts += np.bincount(np.asarray(emitted[:, 0]),
+                              minlength=cfg.vocab_size)
+    n = counts.sum()
+    assert n == B * trials
+    exp = q * n
+    # pool bins with tiny expectation into one bucket, then chi-square
+    big = exp >= 2.0
+    obs_b = np.append(counts[big], counts[~big].sum())
+    exp_b = np.append(exp[big], exp[~big].sum())
+    keep = exp_b > 0
+    chi2 = float(((obs_b[keep] - exp_b[keep]) ** 2 / exp_b[keep]).sum())
+    dof = int(keep.sum()) - 1
+    # p ~ 1e-3 critical value, Wilson-Hilferty approximation
+    z = 3.09
+    crit = dof * (1.0 - 2.0 / (9 * dof) + z * np.sqrt(2.0 / (9 * dof))) ** 3
+    assert chi2 < crit, (chi2, crit, dof)
+    # every emitted token lies in q's support (filtering respected)
+    assert counts[q <= 1e-9].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# jit cache: LRU-bounded, clearable
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_bounded_and_clearable(tiny_cfg):
+    clear_jit_cache()
+    assert len(srvmod._JIT_CACHE) == 0
+    for i in range(srvmod._JIT_CACHE_CAP + 4):
+        srvmod._jitted_steps(tiny_cfg, _pc(n_blocks=32 + i), None)
+    assert len(srvmod._JIT_CACHE) == srvmod._JIT_CACHE_CAP
+    # surviving entries are the 8 most recent (n_blocks 36..43); a hit
+    # refreshes recency, so the next miss evicts 37, not the re-hit 36
+    assert [k[1].n_blocks for k in srvmod._JIT_CACHE] == list(
+        range(36, 44))
+    srvmod._jitted_steps(tiny_cfg, _pc(n_blocks=36), None)   # re-hit LRU
+    srvmod._jitted_steps(tiny_cfg, _pc(n_blocks=999), None)  # miss
+    held = {k[1].n_blocks for k in srvmod._JIT_CACHE}
+    assert 36 in held and 999 in held and 37 not in held
+    clear_jit_cache()
+    assert len(srvmod._JIT_CACHE) == 0
