@@ -42,7 +42,14 @@ SCHEMA_VERSION = 1
 
 def write_envelope(out_dir: str, module: str, results, *,
                    quick: bool) -> str:
-    """``BENCH_<name>.json`` with the versioned envelope; returns path."""
+    """``BENCH_<name>.json`` with the versioned envelope; returns path.
+
+    The envelope carries an ``obs`` snapshot of the process-wide metrics
+    registry (empty unless the module's code paths recorded into it —
+    e.g. compression shape-class timings), so the artifact preserves the
+    instrumentation view alongside the headline numbers. Additive field;
+    the envelope schema stays at version 1."""
+    from repro.obs import metrics as obs_metrics
     name = module[len("bench_"):] if module.startswith("bench_") \
         else module
     path = os.path.join(out_dir, f"BENCH_{name}.json")
@@ -51,6 +58,7 @@ def write_envelope(out_dir: str, module: str, results, *,
                    "suite": "curing-repro-bench",
                    "module": module,
                    "quick": quick,
+                   "obs": obs_metrics.snapshot(),
                    "results": results}, f, indent=1)
         f.write("\n")
     return path
@@ -67,9 +75,15 @@ def main() -> None:
     args = ap.parse_args()
     mods = [args.only] if args.only else MODULES
     quick = not args.full
+    # the driver runs with obs on so envelopes carry the metrics the
+    # benchmarked code paths record; reset per module so each envelope
+    # snapshots only its own run
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.enable()
     print("name,us_per_call,derived")
     for name in mods:
         t0 = time.time()
+        obs_metrics.default_registry().reset()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             if hasattr(mod, "run_results"):

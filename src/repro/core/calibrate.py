@@ -17,6 +17,7 @@ pass on host syncs.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List
 
 import jax
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, MLP, MOE
+from repro.obs import metrics as obs_metrics
 from repro.models import attention as attn
 from repro.models import mamba as mb
 from repro.models.layers import norm
@@ -115,6 +117,18 @@ def _jitted_step(cfg, mesh):
 
 def calibrate(params, cfg, batches, mesh=None) -> CalibStats:
     """batches: list of batch dicts (each one calibration micro-batch)."""
+    # default-registry timings (NULL no-ops unless obs is enabled): the
+    # first batch carries the jit compile, so the per-batch histogram
+    # makes compile-vs-steady cost visible without perturbing the pass
+    h_batch = obs_metrics.histogram(
+        "repro_compress_calibrate_batch_s",
+        "per-micro-batch calibration forward (s); first = compile")
+    c_time = obs_metrics.counter(
+        "repro_compress_calibrate_time_s_total",
+        "total calibration pass seconds")
+    c_toks = obs_metrics.counter(
+        "repro_compress_calibrate_tokens_total", "calibration tokens")
+    t_pass = time.perf_counter()
     step = _jitted_step(cfg, mesh)
     hidden_chunks = []
     act_acc: List[Dict[str, jnp.ndarray]] = [
@@ -122,6 +136,7 @@ def calibrate(params, cfg, batches, mesh=None) -> CalibStats:
     n_tokens = 0
 
     for batch in batches:
+        t0 = time.perf_counter()
         shape = (batch["tokens"] if cfg.input_mode == "tokens"
                  else batch["embeds"]).shape
         n_tokens += shape[0] * shape[1]
@@ -131,7 +146,10 @@ def calibrate(params, cfg, batches, mesh=None) -> CalibStats:
             for t, sq in acc.items():
                 prev = act_acc[li].get(t)
                 act_acc[li][t] = sq if prev is None else prev + sq
+        h_batch.observe(time.perf_counter() - t0)
 
     hidden, act_np = jax.device_get(
         (jnp.concatenate(hidden_chunks, axis=1), act_acc))
+    c_time.inc(time.perf_counter() - t_pass)
+    c_toks.inc(n_tokens)
     return CalibStats(hidden=hidden, act_sq=act_np, n_tokens=n_tokens)

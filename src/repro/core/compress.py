@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.configs.base import CURConfig, ModelConfig
 from repro.core import angular
+from repro.obs import metrics as obs_metrics
 from repro.core.calibrate import CalibStats, iter_layer_params
 from repro.core.cur import (
     cur_from_indices,
@@ -207,6 +208,9 @@ def compress_weight(W: jnp.ndarray, name: str, layer: int,
         bound = float(spectral_error_bound(
             aux["P"][:, :r], aux["Q"][:, :r], aux["sig"], p, q))
     dt = time.perf_counter() - t0
+    obs_metrics.histogram(
+        "repro_compress_weight_s",
+        "per-weight CUR time (loop pipeline / reference path)").observe(dt)
     leaf = {
         "C": C.astype(W.dtype),
         "U0": U.astype(jnp.float32),
@@ -306,6 +310,14 @@ def _compress_batched(work: List[_WorkItem], cur_cfg: CURConfig):
         ps, qs, errs, frows, bounds = jax.device_get(
             (out["p"], out["q"], out["err"], out["frow"], out["bound"]))
         dt = (time.perf_counter() - t0) / len(idxs)
+        # per-shape-class warm timing; the label space is open-ended but
+        # small in practice, so overflow degrades to NULL instead of
+        # raising mid-compression
+        obs_metrics.default_registry().histogram(
+            "repro_compress_class_s",
+            "warm per-weight seconds by (m,n,r) shape-class",
+            labels=("shape",), overflow="drop").labels(
+            shape=f"{m}x{n}r{r}").observe(dt)
         before, unfolded, folded, deployed = _param_counts(
             m, n, r, cur_cfg.fold_u)
         for k, i in enumerate(idxs):
@@ -428,4 +440,13 @@ def compress_model(params, cfg: ModelConfig, cur_cfg: CURConfig,
         distances=distances, layers=sorted(layer_set), weights=infos,
         seconds_total=time.perf_counter() - t_start,
         seconds_fold=seconds_fold)
+    obs_metrics.counter(
+        "repro_compress_time_s_total",
+        "compress_model wall seconds").inc(cinfo.seconds_total)
+    obs_metrics.counter(
+        "repro_compress_fold_time_s_total",
+        "seconds folding C@U").inc(seconds_fold)
+    obs_metrics.counter(
+        "repro_compress_weights_total",
+        "weights CUR-compressed").inc(len(infos))
     return new_params, new_cfg, cinfo

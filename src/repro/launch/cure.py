@@ -24,6 +24,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
@@ -60,17 +61,25 @@ def _smoke_generate(params, cfg, *, n_requests: int, prompt_len: int,
 
 
 def cure(args) -> dict:
-    stages = {}
+    # per-stage timing lives on a span tracer (always on — it IS the
+    # stages_s report); --trace additionally writes the Perfetto JSON
+    tracer = getattr(args, "tracer", None) or obs.Tracer(
+        enabled=True, process="repro.cure")
+    if getattr(args, "obs", False):
+        obs.enable()
+    prof = obs.JaxProfiler(
+        os.path.join(getattr(args, "obs_out", None) or "results/obs/cure",
+                     "jaxprof")
+        if getattr(args, "prof", False) else None, tracer=tracer)
     t_total = time.perf_counter()
 
     # ---- init ---------------------------------------------------------
-    t0 = time.perf_counter()
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.input_mode != "tokens":
-        raise SystemExit(f"{args.arch} uses the embeddings stub")
-    params = jax.block_until_ready(
-        init_params(jax.random.PRNGKey(args.seed), cfg))
-    stages["init"] = time.perf_counter() - t0
+    with tracer.span("init"):
+        cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+        if cfg.input_mode != "tokens":
+            raise SystemExit(f"{args.arch} uses the embeddings stub")
+        params = jax.block_until_ready(
+            init_params(jax.random.PRNGKey(args.seed), cfg))
 
     # ---- calibrate ----------------------------------------------------
     ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
@@ -78,9 +87,8 @@ def cure(args) -> dict:
                                 global_batch=args.calib_batch,
                                 seed=args.seed))
     batches = [ds.batch_at(i) for i in range(args.calib_batches)]
-    t0 = time.perf_counter()
-    calib = calibrate(params, cfg, batches)
-    stages["calibrate"] = time.perf_counter() - t0
+    with tracer.span("calibrate"), prof.scope("calibrate"):
+        calib = calibrate(params, cfg, batches)
 
     # ---- plan (repro.plan: budget -> per-weight ranks) ----------------
     ccfg = CURConfig(r_max=args.r_max, n_compress_layers=args.layers,
@@ -88,7 +96,7 @@ def cure(args) -> dict:
                      fold_u=not args.no_fold, pipeline=args.pipeline,
                      seed=args.seed)
     plan, plan_source, layers = None, "uniform", None
-    t0 = time.perf_counter()
+    t_plan = time.perf_counter()
     if args.plan:
         plan = CompressionPlan.load(args.plan)
         plan_source = "file"
@@ -114,23 +122,26 @@ def cure(args) -> dict:
             os.makedirs(os.path.dirname(args.emit_plan) or ".",
                         exist_ok=True)
             plan.save(args.emit_plan)
-    stages["plan"] = time.perf_counter() - t0
+    tracer.add_span("plan", t_plan, time.perf_counter() - t_plan)
 
     # ---- compress + fold ----------------------------------------------
     t0 = time.perf_counter()
-    cparams, ccfg_model, info = compress_model(params, cfg, ccfg, calib,
-                                               layers=layers)
+    with prof.scope("compress"):
+        cparams, ccfg_model, info = compress_model(params, cfg, ccfg,
+                                                   calib, layers=layers)
     dt = time.perf_counter() - t0
-    stages["compress"] = dt - info.seconds_fold
-    stages["fold"] = info.seconds_fold
+    # fold time is measured inside compress_model; split the wall span
+    # into back-to-back compress/fold spans so durations() reports both
+    tracer.add_span("compress", t0, dt - info.seconds_fold)
+    tracer.add_span("fold", t0 + dt - info.seconds_fold,
+                    info.seconds_fold)
 
     # ---- save ---------------------------------------------------------
-    t0 = time.perf_counter()
-    mgr = CheckpointManager(args.ckpt_dir, keep_n=1)
-    mgr.save(0, {"params": cparams})
-    save_tree_template(os.path.join(args.ckpt_dir, "template.json"),
-                       {"params": cparams})
-    stages["save"] = time.perf_counter() - t0
+    with tracer.span("save"):
+        mgr = CheckpointManager(args.ckpt_dir, keep_n=1)
+        mgr.save(0, {"params": cparams})
+        save_tree_template(os.path.join(args.ckpt_dir, "template.json"),
+                           {"params": cparams})
 
     # ---- draft (self-drafted speculative decoding companion) ----------
     draft_report = None
@@ -156,7 +167,7 @@ def cure(args) -> dict:
         save_tree_template(os.path.join(draft_dir, "template.json"),
                            {"params": dparams})
         dplan.save(os.path.join(draft_dir, "plan.json"))
-        stages["draft"] = time.perf_counter() - t0
+        tracer.add_span("draft", t0, time.perf_counter() - t0)
         dw = dinfo.weights
         d_before = sum(x.params_before for x in dw)
         d_after = sum(x.params_after for x in dw)
@@ -171,12 +182,13 @@ def cure(args) -> dict:
         }
 
     # ---- smoke-generate -----------------------------------------------
-    t0 = time.perf_counter()
-    n_tokens, engine = _smoke_generate(
-        cparams, ccfg_model, n_requests=args.n_requests,
-        prompt_len=args.prompt_len, new_tokens=args.new_tokens,
-        max_concurrency=args.max_concurrency, seed=args.seed)
-    stages["generate"] = time.perf_counter() - t0
+    with tracer.span("generate"):
+        n_tokens, engine = _smoke_generate(
+            cparams, ccfg_model, n_requests=args.n_requests,
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+            max_concurrency=args.max_concurrency, seed=args.seed)
+
+    stages = tracer.durations()
     stages["total"] = time.perf_counter() - t_total
 
     w = info.weights
@@ -302,6 +314,18 @@ def main(argv=None):
                     help="write the per-stage timing/params/error JSON "
                          "here (Table-1 mapping)")
     ap.add_argument("--seed", type=int, default=0)
+    # observability (repro.obs)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the process-wide metrics registry and "
+                         "write metrics.json/.prom to --obs-out")
+    ap.add_argument("--obs-out", default="results/obs/cure",
+                    help="directory for obs artifacts")
+    ap.add_argument("--trace", action="store_true",
+                    help="write a Chrome/Perfetto trace.json of the "
+                         "stage spans to --obs-out")
+    ap.add_argument("--prof", action="store_true",
+                    help="capture a jax.profiler trace per stage under "
+                         "--obs-out/jaxprof")
     args = ap.parse_args(argv)
     if args.ckpt_dir is None:
         args.ckpt_dir = os.path.join("results", "cure", args.arch)
@@ -317,7 +341,16 @@ def main(argv=None):
     if args.draft_layers is None:
         args.draft_layers = args.layers
 
+    args.tracer = obs.Tracer(
+        enabled=True, process="repro.cure") if args.trace else None
     report = cure(args)
+    if args.obs or args.trace:
+        written = obs.write_all(
+            args.obs_out,
+            registry=obs.default_registry() if args.obs else None,
+            tracer=args.tracer)
+        for kind, path in written.items():
+            print(f"  obs {kind} -> {path}")
 
     s = report["stages_s"]
     p = report["params"]

@@ -23,6 +23,7 @@ import time
 
 import jax
 
+from repro import obs
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import CURConfig
 from repro.core import calibrate
@@ -97,7 +98,35 @@ def main(argv=None):
     ap.add_argument("--heal-steps", type=int, default=20)
     ap.add_argument("--max-ppl-increase", type=float, default=0.10)
     ap.add_argument("--eval-batches", type=int, default=2)
+    # observability (repro.obs)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the process-wide metrics registry and "
+                         "write metrics.json/.prom to --obs-out")
+    ap.add_argument("--obs-out", default="results/obs/plan",
+                    help="directory for obs artifacts")
+    ap.add_argument("--trace", action="store_true",
+                    help="record planning/round spans and write a "
+                         "Chrome/Perfetto trace.json")
+    ap.add_argument("--prof", action="store_true",
+                    help="capture a jax.profiler trace under "
+                         "--obs-out/jaxprof")
     args = ap.parse_args(argv)
+
+    if args.obs:
+        obs.enable()
+    tracer = obs.Tracer(enabled=args.trace, process="repro.plan")
+    prof = obs.JaxProfiler(
+        os.path.join(args.obs_out, "jaxprof") if args.prof else None,
+        tracer=tracer)
+
+    def _export():
+        if args.obs or args.trace:
+            written = obs.write_all(
+                args.obs_out,
+                registry=obs.default_registry() if args.obs else None,
+                tracer=tracer)
+            for kind_, path in written.items():
+                print(f"  obs {kind_} -> {path}")
 
     kind, value = budget_from_args(args)
     params, cfg, arch_name = _init_model(args)
@@ -128,16 +157,20 @@ def main(argv=None):
             heal_ds = SyntheticLM(DataConfig(
                 vocab_size=cfg.vocab_size, seq_len=args.calib_len,
                 global_batch=args.calib_batch, seed=args.seed + 2))
-        res = progressive_cure(
-            params, cfg, budget_kind=kind, budget_value=value,
-            n_layers=args.layers, rounds=args.rounds,
-            calib_batches=batches, eval_batches=evalb,
-            heal_batch_at=heal_ds.batch_at, heal_steps=args.heal_steps,
-            cur_cfg=CURConfig(r_max=args.r_max, selection=args.selection,
-                              svd=args.svd, fold_u=False, seed=args.seed),
-            grid=parse_grid(args.grid), solver=args.solver,
-            max_ppl_increase=args.max_ppl_increase, arch=arch_name,
-            verbose=True)
+        with prof.scope("progressive"):
+            res = progressive_cure(
+                params, cfg, budget_kind=kind, budget_value=value,
+                n_layers=args.layers, rounds=args.rounds,
+                calib_batches=batches, eval_batches=evalb,
+                heal_batch_at=heal_ds.batch_at,
+                heal_steps=args.heal_steps,
+                cur_cfg=CURConfig(r_max=args.r_max,
+                                  selection=args.selection,
+                                  svd=args.svd, fold_u=False,
+                                  seed=args.seed),
+                grid=parse_grid(args.grid), solver=args.solver,
+                max_ppl_increase=args.max_ppl_increase, arch=arch_name,
+                verbose=True, tracer=tracer)
         print(f"progressive: ppl {res.ppl_initial:.2f} -> "
               f"{res.ppl_final:.2f} over {len(res.rounds)} round(s)"
               f"{' (early stop)' if res.early_stopped else ''}")
@@ -146,14 +179,18 @@ def main(argv=None):
             os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
             accepted[-1].plan.save(args.out)
             print(f"  last accepted round's plan -> {args.out}")
+        _export()
         return res
 
     t0 = time.perf_counter()
-    calib = calibrate(params, cfg, batches)
-    plan, profile = plan_for_model(
-        params, cfg, ccfg, calib, budget_kind=kind, budget_value=value,
-        n_layers=args.layers, grid=parse_grid(args.grid),
-        solver=args.solver, arch=arch_name)
+    with tracer.span("calibrate"), prof.scope("calibrate"):
+        calib = calibrate(params, cfg, batches)
+    with tracer.span("profile_allocate"), prof.scope("profile_allocate"):
+        plan, profile = plan_for_model(
+            params, cfg, ccfg, calib, budget_kind=kind,
+            budget_value=value, n_layers=args.layers,
+            grid=parse_grid(args.grid), solver=args.solver,
+            arch=arch_name)
     dt = time.perf_counter() - t0
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
@@ -171,6 +208,7 @@ def main(argv=None):
         print(f"    {key:>16s}  r={plan.ranks[key]:<4d} "
               f"pred_rel_err={plan.predicted['rel_err'][key]:.4f}")
     print(f"  plan -> {args.out}")
+    _export()
     return plan
 
 

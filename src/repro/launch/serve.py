@@ -28,6 +28,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
@@ -94,7 +95,7 @@ def run_continuous(server: Server, workload, *, temperature: float = 0.0,
     return server.finished, stats
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b", choices=list(ARCHS))
     ap.add_argument("--smoke", action="store_true")
@@ -132,10 +133,29 @@ def main():
     ap.add_argument("--draft-kv-rank", type=int, default=0,
                     help="CUR-KV rank for the DRAFT's paged pool "
                          "(0: same pool config as the target)")
-    args = ap.parse_args()
+    # observability (repro.obs)
+    ap.add_argument("--obs", action="store_true",
+                    help="route serving metrics through the process-wide "
+                         "registry and write metrics.json/.prom + "
+                         "events.jsonl to --obs-out")
+    ap.add_argument("--obs-out", default="results/obs/serve",
+                    help="directory for obs artifacts")
+    ap.add_argument("--trace", action="store_true",
+                    help="record engine + per-request lifecycle spans "
+                         "and write a Chrome/Perfetto trace.json")
+    ap.add_argument("--prof", action="store_true",
+                    help="capture a jax.profiler trace of the serve "
+                         "loop under --obs-out/jaxprof")
+    args = ap.parse_args(argv)
     if args.paged_kernel is not None:
         os.environ["REPRO_PAGED_KERNEL"] = {
             "auto": "auto", "on": "1", "off": "0"}[args.paged_kernel]
+    if args.obs:
+        obs.enable()
+    tracer = obs.Tracer(enabled=args.trace, process="repro.serve")
+    prof = obs.JaxProfiler(
+        os.path.join(args.obs_out, "jaxprof") if args.prof else None,
+        tracer=tracer)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.input_mode != "tokens":
@@ -206,15 +226,26 @@ def main():
                     max_concurrency=args.max_concurrency,
                     draft_params=draft_params, draft_cfg=draft_cfg,
                     draft_pc=draft_pc,
-                    spec_k=args.spec_k if draft_params is not None else 0)
+                    spec_k=args.spec_k if draft_params is not None else 0,
+                    # with --obs the server records straight into the
+                    # process-wide registry, so one export carries both
+                    obs=obs.default_registry() if args.obs else None,
+                    tracer=tracer)
     from repro.serving.runtime import use_paged_kernel
     print(f"serving {args.n_requests} requests "
           f"(concurrency {args.max_concurrency}, block {args.block_size}, "
           f"pool {pc.n_blocks} blocks, cur_kv={args.cur_kv}, "
           f"paged_kernel={'on' if use_paged_kernel() else 'off'}"
           + (f", spec_k={server.spec_k}" if server.spec_k else "") + ")")
-    finished, stats = run_continuous(server, workload,
-                                     temperature=args.temperature)
+    with prof.scope("serve"):
+        finished, stats = run_continuous(server, workload,
+                                         temperature=args.temperature)
+    print(f"slo: ttft p50 {stats['ttft_p50_s']*1e3:.0f}ms "
+          f"p99 {stats['ttft_p99_s']*1e3:.0f}ms | tpot "
+          f"p50 {stats['tpot_p50_s']*1e3:.1f}ms "
+          f"p99 {stats['tpot_p99_s']*1e3:.1f}ms | "
+          f"busy {stats['tokens_per_s_busy']:.1f} tok/s "
+          f"(wall {stats['tokens_per_s']:.1f})")
     if server.spec_k:
         print(f"speculative: accept rate "
               f"{stats['spec_accept_rate']:.3f} over "
@@ -225,6 +256,25 @@ def main():
     first = finished[min(finished)]
     print(f"request 0: {len(first.out_tokens)} tokens "
           f"{first.out_tokens[:8]}{'...' if len(first.out_tokens) > 8 else ''}")
+
+    if args.obs or args.trace:
+        os.makedirs(args.obs_out, exist_ok=True)
+        if args.obs:
+            log = obs.JsonlLog(os.path.join(args.obs_out, "events.jsonl"))
+            for rid in sorted(finished):
+                r = finished[rid]
+                log.log("request", rid=rid, tokens=len(r.out_tokens),
+                        ttft_s=r.ttft, reason=r.finish_reason,
+                        preempted=r.n_preempted)
+            log.log("stats", **stats)
+            log.close()
+            print(f"  obs events -> {log.path}")
+        written = obs.write_all(
+            args.obs_out, registry=server.obs if args.obs else None,
+            tracer=tracer)
+        for kind, path in written.items():
+            print(f"  obs {kind} -> {path}")
+    return stats
 
 
 if __name__ == "__main__":

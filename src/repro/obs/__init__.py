@@ -1,0 +1,38 @@
+"""repro.obs — unified metrics / tracing / profiling.
+
+Layered as:
+
+  metrics    process-wide registry: counters, gauges, labeled
+             histograms (log-spaced buckets + exact-percentile
+             reservoir); near-zero-cost NULL path when disabled
+  trace      span tracker (context-manager + decorator), per-request
+             lifecycle lanes, Chrome-trace/Perfetto JSON export
+  export     sinks: one-shot snapshot dict, Prometheus text
+             exposition, JSONL event log, write_all artifact set
+  jaxprof    scoped jax.profiler capture + device memory snapshots
+             keyed to obs spans
+
+Metric names are stable and namespaced: ``repro_serving_*`` for the
+runtime (TTFT/TPOT histograms, pool occupancy, spec accept rate,
+JIT-cache hit/miss), ``repro_compress_*`` for the compression pipeline
+(per-stage and per-shape-class timings), ``repro_plan_*`` for
+progressive rounds. ``benchmarks/bench_serving.py`` computes its SLO
+percentiles from the same histograms the server reports — benchmark
+numbers and production stats share one code path.
+"""
+from repro.obs.export import JsonlLog, snapshot, to_prometheus, write_all
+from repro.obs.jaxprof import JaxProfiler, device_memory_snapshot
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS, NULL, Counter, Gauge, Histogram, Registry, counter,
+    default_registry, disable, enable, enabled, gauge, histogram,
+    log_buckets)
+from repro.obs.trace import (
+    ENGINE_TRACK, NULL_CTX, NULL_TRACER, Tracer, request_track)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "Tracer", "JaxProfiler",
+    "JsonlLog", "DEFAULT_BUCKETS", "ENGINE_TRACK", "NULL", "NULL_CTX",
+    "NULL_TRACER", "counter", "default_registry", "device_memory_snapshot",
+    "disable", "enable", "enabled", "gauge", "histogram", "log_buckets",
+    "request_track", "snapshot", "to_prometheus", "write_all",
+]

@@ -1,0 +1,85 @@
+"""Scoped ``jax.profiler`` capture + device memory snapshots.
+
+The XLA profiler is process-global and heavyweight, so this wrapper
+keeps it strictly opt-in (``--prof``) and failure-tolerant: platforms
+or builds without profiler support degrade to a no-op instead of
+killing the serve loop. Captures are keyed to obs spans by emitting a
+matching instant event on the tracer, so the Perfetto timeline and the
+XLA trace directory line up by name.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Optional
+
+import jax
+
+from repro.obs.trace import Tracer
+
+
+def device_memory_snapshot() -> dict:
+    """Per-device memory stats (empty dict where the backend doesn't
+    report any, e.g. CPU)."""
+    out = {}
+    for d in jax.local_devices():
+        try:
+            stats = d.memory_stats()
+        except Exception:
+            stats = None
+        if stats:
+            out[str(d)] = {k: int(v) for k, v in stats.items()
+                           if isinstance(v, (int, float))}
+    return out
+
+
+class JaxProfiler:
+    """Start/stop wrapper around ``jax.profiler`` trace capture.
+
+    ``scope(name)`` is the span-keyed form: it emits ``prof:<name>``
+    instants on the tracer and snapshots device memory on entry/exit
+    (attached to the event args), so a Perfetto view of the obs trace
+    points at the matching XLA capture under ``out_dir``.
+    """
+
+    def __init__(self, out_dir: Optional[str],
+                 tracer: Optional[Tracer] = None):
+        self.out_dir = out_dir
+        self.tracer = tracer
+        self.active = False
+        self.available = out_dir is not None
+
+    def start(self) -> bool:
+        if not self.available or self.active:
+            return False
+        try:
+            os.makedirs(self.out_dir, exist_ok=True)
+            jax.profiler.start_trace(self.out_dir)
+            self.active = True
+        except Exception:
+            self.available = False
+        return self.active
+
+    def stop(self) -> None:
+        if not self.active:
+            return
+        try:
+            jax.profiler.stop_trace()
+        finally:
+            self.active = False
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        """Profile one region, keyed to the obs trace by name."""
+        started = self.start()
+        if self.tracer is not None:
+            self.tracer.event(f"prof:{name}", phase="start",
+                              mem=device_memory_snapshot())
+        try:
+            yield self
+        finally:
+            if self.tracer is not None:
+                self.tracer.event(f"prof:{name}", phase="stop",
+                                  mem=device_memory_snapshot())
+            if started:
+                self.stop()

@@ -33,6 +33,8 @@ import jax
 
 from repro.configs.base import CURConfig, ModelConfig, OptimizerConfig
 from repro.core import angular, calibrate, compress_model
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import NULL_TRACER
 from repro.core.heal import (
     combine_params, make_heal_step, partition_params, trainable_mask)
 from repro.optim.adamw import AdamW
@@ -110,6 +112,7 @@ def progressive_cure(params, cfg: ModelConfig, *,
                      opt_cfg: Optional[OptimizerConfig] = None,
                      max_ppl_increase: float = 0.10,
                      arch: str = "", verbose: bool = False,
+                     tracer=None,
                      ) -> ProgressiveResult:
     """Stage ``n_layers`` of compression across ``rounds`` rounds at the
     global ``budget_value`` (per-weight budget fraction identical to the
@@ -137,6 +140,20 @@ def progressive_cure(params, cfg: ModelConfig, *,
         lr=3e-4, warmup_steps=max(1, heal_steps // 10),
         total_steps=max(1, heal_steps * rounds))
 
+    tracer = tracer or NULL_TRACER
+    # per-round gauges on the default registry (NULL unless obs is on):
+    # the round label is bounded by the rounds argument, so "raise" holds
+    g_ppl_c = obs_metrics.default_registry().gauge(
+        "repro_plan_round_ppl_compressed",
+        "eval perplexity after compression, before healing",
+        labels=("round",))
+    g_ppl_h = obs_metrics.default_registry().gauge(
+        "repro_plan_round_ppl_healed",
+        "eval perplexity after the round's healing",
+        labels=("round",))
+    c_rounds = obs_metrics.counter(
+        "repro_plan_rounds_total", "progressive rounds executed")
+
     cur_params, cur_cfg_m = params, cfg
     ppl_initial = perplexity(params, cfg, eval_batches)
     prev_ppl = ppl_initial
@@ -153,28 +170,38 @@ def progressive_cure(params, cfg: ModelConfig, *,
         if not candidates:
             break
         t0 = time.perf_counter()
-        calib = calibrate(cur_params, cur_cfg_m, list(calib_batches))
-        distances = angular.layer_distances(calib.hidden)
-        order = sorted(candidates, key=lambda li: distances[li])
-        layers_i = sorted(order[:chunks[i]])
+        with tracer.span("round", round=i):
+            with tracer.span("calibrate", round=i):
+                calib = calibrate(cur_params, cur_cfg_m,
+                                  list(calib_batches))
+            distances = angular.layer_distances(calib.hidden)
+            order = sorted(candidates, key=lambda li: distances[li])
+            layers_i = sorted(order[:chunks[i]])
 
-        profile = profile_sensitivity(cur_params, cur_cfg_m, base, calib,
-                                      grid=grid, layers=layers_i)
-        plan = allocate(profile, budget_kind, budget_value, arch=arch,
-                        solver=solver, fold_u=False,
-                        dtype_bytes=dtype_bytes, seed=base.seed)
-        ccfg = plan.to_cur_config(base)
-        new_params, new_cfg, _ = compress_model(
-            cur_params, cur_cfg_m, ccfg, calib, layers=layers_i)
-        ppl_c = perplexity(new_params, new_cfg, eval_batches)
+            with tracer.span("profile_allocate", round=i):
+                profile = profile_sensitivity(cur_params, cur_cfg_m, base,
+                                              calib, grid=grid,
+                                              layers=layers_i)
+                plan = allocate(profile, budget_kind, budget_value,
+                                arch=arch, solver=solver, fold_u=False,
+                                dtype_bytes=dtype_bytes, seed=base.seed)
+            ccfg = plan.to_cur_config(base)
+            with tracer.span("compress", round=i):
+                new_params, new_cfg, _ = compress_model(
+                    cur_params, cur_cfg_m, ccfg, calib, layers=layers_i)
+            ppl_c = perplexity(new_params, new_cfg, eval_batches)
 
-        if heal_steps:
-            new_params, _ = _heal(
-                new_params, new_cfg, cur_params, cur_cfg_m,
-                steps=heal_steps, batch_at=heal_batch_at, opt_cfg=opt_cfg,
-                step_offset=i * heal_steps)
-        ppl_h = perplexity(new_params, new_cfg, eval_batches)
+            if heal_steps:
+                with tracer.span("heal", round=i):
+                    new_params, _ = _heal(
+                        new_params, new_cfg, cur_params, cur_cfg_m,
+                        steps=heal_steps, batch_at=heal_batch_at,
+                        opt_cfg=opt_cfg, step_offset=i * heal_steps)
+            ppl_h = perplexity(new_params, new_cfg, eval_batches)
 
+        g_ppl_c.labels(round=i).set(ppl_c)
+        g_ppl_h.labels(round=i).set(ppl_h)
+        c_rounds.inc()
         ok = ppl_h <= prev_ppl * (1.0 + max_ppl_increase)
         results.append(RoundResult(
             round=i, layers=layers_i, ranks=dict(plan.ranks),

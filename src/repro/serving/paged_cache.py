@@ -64,12 +64,38 @@ class PagedConfig:
 # ---------------------------------------------------------------------------
 
 class BlockAllocator:
-    """Free-list allocator with refcounts (fork = shared, copy-on-write)."""
+    """Free-list allocator with refcounts (fork = shared, copy-on-write).
 
-    def __init__(self, n_blocks: int):
+    When an obs :class:`~repro.obs.metrics.Registry` is attached, pool
+    traffic becomes first-class signals: alloc/free/fork/CoW counters
+    plus a live occupancy gauge (``repro_serving_pool_blocks_used``).
+    Without one the hooks are the shared NULL instrument — zero cost.
+    """
+
+    def __init__(self, n_blocks: int, obs=None):
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._ref: Dict[int, int] = {}
+        if obs is None:
+            from repro.obs.metrics import NULL
+            self._m_alloc = self._m_free = self._m_fork = NULL
+            self._m_cow = self._m_used = NULL
+        else:
+            self._m_alloc = obs.counter(
+                "repro_serving_pool_alloc_total",
+                "blocks handed out by the pool")
+            self._m_free = obs.counter(
+                "repro_serving_pool_free_total",
+                "block references dropped")
+            self._m_fork = obs.counter(
+                "repro_serving_pool_fork_total",
+                "blocks shared by table forks")
+            self._m_cow = obs.counter(
+                "repro_serving_pool_cow_total",
+                "copy-on-write block copies")
+            self._m_used = obs.gauge(
+                "repro_serving_pool_blocks_used",
+                "live (referenced) pool blocks")
 
     @property
     def n_free(self) -> int:
@@ -85,6 +111,8 @@ class BlockAllocator:
         out = [self._free.pop() for _ in range(n)]
         for b in out:
             self._ref[b] = 1
+        self._m_alloc.inc(n)
+        self._m_used.set(self.n_blocks - len(self._free))
         return out
 
     def free(self, blocks: Sequence[int]) -> None:
@@ -98,6 +126,8 @@ class BlockAllocator:
                 self._free.append(b)
             else:
                 self._ref[b] = r - 1
+        self._m_free.inc(len(blocks))
+        self._m_used.set(self.n_blocks - len(self._free))
 
     def fork(self, blocks: Sequence[int]) -> List[int]:
         """Share a block list (prefix reuse): bump refcounts, same ids."""
@@ -105,6 +135,7 @@ class BlockAllocator:
             if b not in self._ref:
                 raise ValueError(f"fork of unallocated block {b}")
             self._ref[b] += 1
+        self._m_fork.inc(len(blocks))
         return list(blocks)
 
     def copy_on_write(self, block: int) -> Optional[int]:
@@ -117,6 +148,7 @@ class BlockAllocator:
         if fresh is None:
             return None
         self._ref[block] -= 1
+        self._m_cow.inc()
         return fresh[0]
 
 

@@ -77,14 +77,23 @@ class Plan:
 
 
 class Scheduler:
-    def __init__(self, pc: PagedConfig, max_concurrency: int):
+    def __init__(self, pc: PagedConfig, max_concurrency: int, obs=None,
+                 tracer=None):
         self.pc = pc
         self.max_concurrency = max_concurrency
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Slot]] = [None] * max_concurrency
-        self.alloc = BlockAllocator(pc.n_blocks)
+        self.alloc = BlockAllocator(pc.n_blocks, obs=obs)
+        self.tracer = tracer
         self._admit_seq = 0
         self.n_preemptions = 0
+        if obs is None:
+            from repro.obs.metrics import NULL
+            self._m_preempt = NULL
+        else:
+            self._m_preempt = obs.counter(
+                "repro_serving_preemptions_total",
+                "slots evicted on pool exhaustion")
 
     # -- introspection -------------------------------------------------
     @property
@@ -177,6 +186,11 @@ class Scheduler:
         self.slots[slot_id] = None
         slot.req.n_preempted += 1
         self.n_preemptions += 1
+        self._m_preempt.inc()
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.event("preempt", track=slot.req.rid + 1,
+                              rid=slot.req.rid,
+                              generated=len(slot.req.out_tokens))
         self.queue.appendleft(slot.req)
 
     # -- speculative fork / commit -------------------------------------

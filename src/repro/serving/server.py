@@ -19,6 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import Registry
+from repro.obs.trace import (
+    ENGINE_TRACK, NULL_TRACER, Tracer, request_track)
 from repro.serving import paged_cache as pcache
 from repro.serving import runtime
 from repro.serving import speculative
@@ -49,6 +53,21 @@ def _bucket(n: int, lo: int, hi: int) -> int:
 _JIT_CACHE: "OrderedDict" = OrderedDict()
 _JIT_CACHE_CAP = 8
 
+# process-lifetime hit/miss/evict tallies, mirrored into the default obs
+# registry (no-op when obs is disabled) so the serve/bench artifacts carry
+# compile-reuse behaviour alongside latency
+_JIT_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def jit_cache_stats() -> dict:
+    return dict(_JIT_STATS, size=len(_JIT_CACHE))
+
+
+def _jit_count(event: str) -> None:
+    _JIT_STATS[event] += 1
+    obs_metrics.counter(f"repro_serving_jit_cache_{event}_total",
+                        "compiled-step cache " + event).inc()
+
 
 def clear_jit_cache() -> None:
     """Drop every cached compiled step function (frees the compiled
@@ -59,8 +78,10 @@ def clear_jit_cache() -> None:
 def _jit_cache_put(key, value):
     _JIT_CACHE[key] = value
     _JIT_CACHE.move_to_end(key)
+    _jit_count("misses")
     while len(_JIT_CACHE) > _JIT_CACHE_CAP:
         _JIT_CACHE.popitem(last=False)
+        _jit_count("evictions")
     return value
 
 
@@ -73,6 +94,7 @@ def _jitted_steps(cfg: ModelConfig, pc, mesh):
     key = (cfg, pc, None if mesh is None else id(mesh), kern)
     if key in _JIT_CACHE:
         _JIT_CACHE.move_to_end(key)
+        _jit_count("hits")
     else:
         def _prefill(params, tokens, lengths, cache, table):
             return runtime.paged_prefill(params, cfg, pc, tokens,
@@ -112,6 +134,7 @@ def _jitted_spec_steps(cfg_t: ModelConfig, pc_t, cfg_d: ModelConfig,
            None if mesh is None else id(mesh), kern)
     if key in _JIT_CACHE:
         _JIT_CACHE.move_to_end(key)
+        _jit_count("hits")
         return _JIT_CACHE[key]
 
     def _draft(params, tokens, cache, table, ctx, active, base_keys,
@@ -146,6 +169,7 @@ def _jitted_draft_sync(cfg_d: ModelConfig, pc_d, mesh):
     key = ("sync", cfg_d, pc_d, None if mesh is None else id(mesh), kern)
     if key in _JIT_CACHE:
         _JIT_CACHE.move_to_end(key)
+        _jit_count("hits")
         return _JIT_CACHE[key]
 
     def _sync(params, tokens, cache, table, ctx, active):
@@ -164,13 +188,21 @@ class Server:
                  calib_tokens=None, max_decode_window: int = 16,
                  draft_params=None, draft_cfg: Optional[ModelConfig] = None,
                  draft_pc: Optional[pcache.PagedConfig] = None,
-                 spec_k: int = 0):
+                 spec_k: int = 0,
+                 obs: Optional[Registry] = None,
+                 tracer: Optional[Tracer] = None):
         runtime.check_supported(cfg)
         self.params = params
         self.cfg = cfg
         self.pc = pc or pcache.PagedConfig()
         self.mesh = mesh
-        self.scheduler = Scheduler(self.pc, max_concurrency)
+        # each Server owns an always-enabled registry (stats() derives
+        # from its snapshot; concurrent Servers never share counters);
+        # pass one in to aggregate across servers or export centrally
+        self.obs = obs if obs is not None else Registry(enabled=True)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.scheduler = Scheduler(self.pc, max_concurrency, obs=self.obs,
+                                   tracer=self.tracer)
         self.cache = pcache.init_paged_cache(cfg, self.pc)
         if calib_tokens is None:
             calib_tokens = jax.random.randint(
@@ -223,27 +255,121 @@ class Server:
         self._packed = None           # cached (temps, top_ks, top_ps)
         self._base_keys = None        # cached fold_in(PRNGKey(seed), rid)
         self.finished: Dict[int, Request] = {}
-        # stats
+        # stats live on the obs registry; the former counter attributes
+        # (tokens_generated, n_decode_steps, ...) are properties below
         self._t_start: Optional[float] = None
-        self.tokens_generated = 0
-        self.n_prefill_steps = 0
-        self.n_decode_steps = 0
-        self.queue_depth_samples: List[int] = []
+        m = self.obs
+        self._c_tokens = m.counter(
+            "repro_serving_tokens_generated_total", "tokens emitted")
+        self._c_completed = m.counter(
+            "repro_serving_requests_completed_total", "requests finished")
+        self._c_prefill_steps = m.counter(
+            "repro_serving_prefill_steps_total", "prefill engine steps")
+        self._c_decode_steps = m.counter(
+            "repro_serving_decode_steps_total", "decode engine steps")
         # phase split: prefill cost is TTFT-bound, decode cost is the
         # steady-state throughput — reported separately so gather-
         # elimination in the decode hot path is visible in the artifact
-        self.prefill_time_s = 0.0
-        self.decode_time_s = 0.0
-        self.prefill_tokens = 0
-        self.decode_tokens = 0
+        self._c_prefill_time = m.counter(
+            "repro_serving_prefill_time_s_total", "seconds in prefill")
+        self._c_decode_time = m.counter(
+            "repro_serving_decode_time_s_total", "seconds in decode")
+        self._c_prefill_tokens = m.counter(
+            "repro_serving_prefill_tokens_total", "tokens from prefill")
+        self._c_decode_tokens = m.counter(
+            "repro_serving_decode_tokens_total", "tokens from decode")
+        self._h_ttft = m.histogram(
+            "repro_serving_ttft_s", "time to first token (s)")
+        self._h_tpot = m.histogram(
+            "repro_serving_tpot_s",
+            "per-token decode latency per step (s)")
+        self._h_prefill_step = m.histogram(
+            "repro_serving_prefill_step_s", "prefill step wall time (s)")
+        self._h_decode_step = m.histogram(
+            "repro_serving_decode_step_s", "decode step wall time (s)")
+        self._h_queue_depth = m.histogram(
+            "repro_serving_queue_depth",
+            "admission queue depth sampled per engine step",
+            buckets=tuple(float(2 ** i) for i in range(12)))
         # speculative split: draft vs verify device time, and the
         # model-level accept rate (accepted draft tokens / proposed)
-        self.n_spec_windows = 0
-        self.n_spec_fallbacks = 0
-        self.spec_tokens_proposed = 0
-        self.spec_tokens_accepted = 0
-        self.spec_draft_time_s = 0.0
-        self.spec_verify_time_s = 0.0
+        self._c_spec_windows = m.counter(
+            "repro_serving_spec_windows_total", "speculative windows run")
+        self._c_spec_fallbacks = m.counter(
+            "repro_serving_spec_fallbacks_total",
+            "windows that fell back to plain decode (pool too full)")
+        self._c_spec_proposed = m.counter(
+            "repro_serving_spec_tokens_proposed_total",
+            "draft tokens proposed")
+        self._c_spec_accepted = m.counter(
+            "repro_serving_spec_tokens_accepted_total",
+            "draft tokens accepted by verify")
+        self._c_spec_draft_time = m.counter(
+            "repro_serving_spec_draft_time_s_total", "seconds drafting")
+        self._c_spec_verify_time = m.counter(
+            "repro_serving_spec_verify_time_s_total", "seconds verifying")
+        self._h_spec_accept = m.histogram(
+            "repro_serving_spec_accept_rate",
+            "per-window accepted/proposed ratio",
+            buckets=tuple(i / 10 for i in range(11)))
+        self._h_spec_window = m.histogram(
+            "repro_serving_spec_window_tokens",
+            "tokens committed per slot per speculative window",
+            buckets=tuple(float(i) for i in range(1, 18)))
+
+    # -- back-compat counter views -------------------------------------
+    # pre-obs code (tests, benchmarks) read these as plain attributes
+    @property
+    def tokens_generated(self) -> int:
+        return int(self._c_tokens.value)
+
+    @property
+    def n_prefill_steps(self) -> int:
+        return int(self._c_prefill_steps.value)
+
+    @property
+    def n_decode_steps(self) -> int:
+        return int(self._c_decode_steps.value)
+
+    @property
+    def prefill_time_s(self) -> float:
+        return self._c_prefill_time.value
+
+    @property
+    def decode_time_s(self) -> float:
+        return self._c_decode_time.value
+
+    @property
+    def prefill_tokens(self) -> int:
+        return int(self._c_prefill_tokens.value)
+
+    @property
+    def decode_tokens(self) -> int:
+        return int(self._c_decode_tokens.value)
+
+    @property
+    def n_spec_windows(self) -> int:
+        return int(self._c_spec_windows.value)
+
+    @property
+    def n_spec_fallbacks(self) -> int:
+        return int(self._c_spec_fallbacks.value)
+
+    @property
+    def spec_tokens_proposed(self) -> int:
+        return int(self._c_spec_proposed.value)
+
+    @property
+    def spec_tokens_accepted(self) -> int:
+        return int(self._c_spec_accepted.value)
+
+    @property
+    def spec_draft_time_s(self) -> float:
+        return self._c_spec_draft_time.value
+
+    @property
+    def spec_verify_time_s(self) -> float:
+        return self._c_spec_verify_time.value
 
     # -- request lifecycle ---------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -258,6 +384,10 @@ class Server:
             sampling=sampling or SamplingParams(), eos_id=eos_id,
             arrival=time.perf_counter() if arrival is None else arrival)
         self.scheduler.add(req)
+        if self.tracer.enabled:
+            self.tracer.name_track(request_track(rid), f"req {rid}")
+            self.tracer.event("queued", track=request_track(rid),
+                              rid=rid, prompt_len=len(req.prompt))
         return rid
 
     @property
@@ -329,6 +459,15 @@ class Server:
         req.finish_time = now
         self.scheduler.retire(slot_id)
         self.finished[req.rid] = req
+        self._c_completed.inc()
+        if self.tracer.enabled:
+            # one whole-lifetime span per request on its own lane
+            self.tracer.add_span(
+                "request", req.arrival, now - req.arrival,
+                track=request_track(req.rid),
+                attrs={"rid": req.rid, "reason": req.finish_reason,
+                       "tokens": len(req.out_tokens),
+                       "preempted": req.n_preempted})
 
     def _run_prefill(self, admitted, now: float) -> None:
         sched = self.scheduler
@@ -359,18 +498,32 @@ class Server:
             logits, lambda s: len(s.req.out_tokens))
         t_now = time.perf_counter()
         for slot_id, req in admitted:
+            if self.tracer.enabled:
+                if req.out_tokens:
+                    # re-admission after preemption
+                    self.tracer.add_span(
+                        "restore", now, t_now - now,
+                        track=request_track(req.rid),
+                        attrs={"rid": req.rid})
+                else:
+                    # waiting in the admission queue until this step
+                    self.tracer.add_span(
+                        "queued", req.arrival, now - req.arrival,
+                        track=request_track(req.rid),
+                        attrs={"rid": req.rid})
             if req.out_tokens:
                 # preemption restore: generated tokens already known; the
                 # re-prefill only rebuilt the cache — nothing to sample
                 sched.slots[slot_id].next_token = req.out_tokens[-1]
                 continue
             req.ttft = t_now - req.arrival
+            self._h_ttft.observe(req.ttft)
             req.out_tokens.append(int(toks[slot_id]))
             req.out_logprobs.append(float(lps[slot_id]))
             sched.slots[slot_id].next_token = req.out_tokens[-1]
-            self.tokens_generated += 1
+            self._c_tokens.inc()
             self._maybe_retire(slot_id, t_now)
-        self.n_prefill_steps += 1
+        self._c_prefill_steps.inc()
 
     def _decode_window(self) -> int:
         """Largest useful multi-step window: a power of two bounded by
@@ -414,9 +567,9 @@ class Server:
             slot.req.out_tokens.append(int(toks[i]))
             slot.req.out_logprobs.append(float(lps[i]))
             slot.next_token = slot.req.out_tokens[-1]
-            self.tokens_generated += 1
+            self._c_tokens.inc()
             self._maybe_retire(i, t_now)
-        self.n_decode_steps += 1
+        self._c_decode_steps.inc()
 
     def _run_spec_decode(self) -> bool:
         """One draft-k/verify-1 window over all running slots. Returns
@@ -427,7 +580,8 @@ class Server:
         k = self.spec_k
         fork = sched.fork_for_spec(k)
         if fork is None:
-            self.n_spec_fallbacks += 1
+            self._c_spec_fallbacks.inc()
+            self.tracer.event("spec_fallback", track=ENGINE_TRACK)
             return False
         B = sched.max_concurrency
         spec_table = np.full((B, self.pc.max_blocks_per_seq), -1,
@@ -466,7 +620,9 @@ class Server:
             jnp.asarray(gen_starts), *self._packed, greedy=greedy)
         jax.block_until_ready(d_toks)
         t1 = time.perf_counter()
-        self.spec_draft_time_s += t1 - t0
+        self._c_spec_draft_time.inc(t1 - t0)
+        self.tracer.add_span("spec_draft", t0, t1 - t0,
+                             track=ENGINE_TRACK, attrs={"k": k})
 
         ver_in = jnp.concatenate([jnp.asarray(next_toks), d_toks], axis=1)
         emitted, n_emit, lps, self.cache = self._spec_verify(
@@ -474,7 +630,10 @@ class Server:
             ctx, active, self._base_keys, jnp.asarray(gen_starts),
             *self._packed, greedy=greedy)
         emitted, n_emit, lps = jax.device_get((emitted, n_emit, lps))
-        self.spec_verify_time_s += time.perf_counter() - t1
+        t2 = time.perf_counter()
+        self._c_spec_verify_time.inc(t2 - t1)
+        self.tracer.add_span("spec_verify", t1, t2 - t1,
+                             track=ENGINE_TRACK, attrs={"k": k})
 
         t_now = time.perf_counter()
         for i in list(sched.active_slots):
@@ -494,12 +653,14 @@ class Server:
                                     for t in range(take))
             sched.commit_spec(i, fork.tables[i], take)
             slot.next_token = req.out_tokens[-1]
-            self.tokens_generated += take
-            self.spec_tokens_proposed += k
-            self.spec_tokens_accepted += int(n_emit[i]) - 1
+            self._c_tokens.inc(take)
+            self._c_spec_proposed.inc(k)
+            self._c_spec_accepted.inc(speculative.record_window(
+                self._h_spec_accept, self._h_spec_window, k,
+                int(n_emit[i]), take))
             self._maybe_retire(i, t_now)
-        self.n_spec_windows += 1
-        self.n_decode_steps += 1
+        self._c_spec_windows.inc()
+        self._c_decode_steps.inc()
         return True
 
     def _run_decode(self, now: float) -> None:
@@ -558,27 +719,42 @@ class Server:
                 slot.ctx_len += 1        # the input token is now cached
                 slot.req.out_tokens.append(int(toks_seq[t, i]))
                 slot.req.out_logprobs.append(float(lps_seq[t, i]))
-                self.tokens_generated += 1
+            self._c_tokens.inc(take)
             slot.next_token = slot.req.out_tokens[-1]
             self._maybe_retire(i, t_now)
-        self.n_decode_steps += k
+        self._c_decode_steps.inc(k)
 
     def step(self) -> bool:
         """One engine iteration. Returns False when nothing was runnable."""
         now = time.perf_counter()
         if self._t_start is None:
             self._t_start = now
-        self.queue_depth_samples.append(self.scheduler.queue_depth)
+        self._h_queue_depth.observe(self.scheduler.queue_depth)
         plan = self.scheduler.plan()
         toks_before = self.tokens_generated
         if plan.kind == "prefill":
             self._run_prefill(plan.prefill, now)
-            self.prefill_time_s += time.perf_counter() - now
-            self.prefill_tokens += self.tokens_generated - toks_before
+            dt = time.perf_counter() - now
+            n = self.tokens_generated - toks_before
+            self._c_prefill_time.inc(dt)
+            self._c_prefill_tokens.inc(n)
+            self._h_prefill_step.observe(dt)
+            self.tracer.add_span("prefill", now, dt, track=ENGINE_TRACK,
+                                 attrs={"admitted": len(plan.prefill),
+                                        "tokens": n})
         elif plan.kind == "decode":
             self._run_decode(now)
-            self.decode_time_s += time.perf_counter() - now
-            self.decode_tokens += self.tokens_generated - toks_before
+            dt = time.perf_counter() - now
+            n = self.tokens_generated - toks_before
+            self._c_decode_time.inc(dt)
+            self._c_decode_tokens.inc(n)
+            self._h_decode_step.observe(dt)
+            if n > 0:
+                # per-token latency of this decode step: the TPOT
+                # distribution the SLO percentiles report
+                self._h_tpot.observe(dt / n)
+            self.tracer.add_span("decode_window", now, dt,
+                                 track=ENGINE_TRACK, attrs={"tokens": n})
         else:
             return False
         return True
@@ -595,38 +771,80 @@ class Server:
         return pcache.cache_bytes(self.cache)
 
     def stats(self) -> dict:
+        """Serving report, derived entirely from the obs registry
+        snapshot. Every pre-obs key is preserved; new keys report exact
+        TTFT/TPOT percentiles, the busy-time throughput basis (wall
+        ``elapsed_s`` includes client think time between ``step()``
+        calls, so both rates are given), pool occupancy, and the
+        process-wide JIT-cache behaviour."""
+        snap = self.obs.snapshot()
+
+        def val(name, default=0.0):
+            s = snap.get(name)
+            return s["value"] if s else default
+
+        def hist(name):
+            return snap.get(name) or {
+                "count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
+                "max": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+
         elapsed = (time.perf_counter() - self._t_start
                    if self._t_start is not None else 0.0)
-        ttfts = [r.ttft for r in self.finished.values()
-                 if r.ttft is not None]
-        qd = self.queue_depth_samples
+        tokens = int(val("repro_serving_tokens_generated_total"))
+        prefill_t = val("repro_serving_prefill_time_s_total")
+        decode_t = val("repro_serving_decode_time_s_total")
+        busy = prefill_t + decode_t
+        decode_toks = int(val("repro_serving_decode_tokens_total"))
+        proposed = val("repro_serving_spec_tokens_proposed_total")
+        ttft, tpot, qd = (hist("repro_serving_ttft_s"),
+                          hist("repro_serving_tpot_s"),
+                          hist("repro_serving_queue_depth"))
         return {
-            "completed": len(self.finished),
-            "tokens_generated": self.tokens_generated,
+            "completed": int(
+                val("repro_serving_requests_completed_total")),
+            "tokens_generated": tokens,
             "elapsed_s": elapsed,
-            "tokens_per_s": (self.tokens_generated / elapsed
-                             if elapsed > 0 else 0.0),
-            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
-            "ttft_max_s": float(np.max(ttfts)) if ttfts else 0.0,
-            "queue_depth_mean": float(np.mean(qd)) if qd else 0.0,
-            "queue_depth_max": int(np.max(qd)) if qd else 0,
-            "n_prefill_steps": self.n_prefill_steps,
-            "n_decode_steps": self.n_decode_steps,
+            "tokens_per_s": tokens / elapsed if elapsed > 0 else 0.0,
+            # busy-time basis: engine time actually spent in steps,
+            # excluding client-side gaps — the honest throughput figure
+            "busy_time_s": busy,
+            "tokens_per_s_busy": tokens / busy if busy > 0 else 0.0,
+            "ttft_mean_s": ttft["mean"],
+            "ttft_max_s": ttft["max"],
+            "ttft_p50_s": ttft["p50"],
+            "ttft_p90_s": ttft["p90"],
+            "ttft_p99_s": ttft["p99"],
+            "tpot_p50_s": tpot["p50"],
+            "tpot_p99_s": tpot["p99"],
+            "queue_depth_mean": qd["mean"],
+            "queue_depth_max": int(qd["max"]),
+            "n_prefill_steps": int(
+                val("repro_serving_prefill_steps_total")),
+            "n_decode_steps": int(
+                val("repro_serving_decode_steps_total")),
             "n_preemptions": self.scheduler.n_preemptions,
             "cache_bytes": self.cache_bytes(),
-            "prefill_time_s": self.prefill_time_s,
-            "decode_time_s": self.decode_time_s,
-            "decode_tok_s": (self.decode_tokens / self.decode_time_s
-                             if self.decode_time_s > 0 else 0.0),
+            "pool_blocks_used": int(
+                val("repro_serving_pool_blocks_used")),
+            "pool_blocks_total": self.pc.n_blocks,
+            "prefill_time_s": prefill_t,
+            "decode_time_s": decode_t,
+            "decode_tok_s": (decode_toks / decode_t
+                             if decode_t > 0 else 0.0),
             "gathered_bytes_per_step": runtime.gathered_bytes_per_step(
                 self.cfg, self.pc, self.scheduler.max_concurrency,
                 kernel=self._paged_kernel),
             "spec_k": self.spec_k,
-            "n_spec_windows": self.n_spec_windows,
-            "n_spec_fallbacks": self.n_spec_fallbacks,
+            "n_spec_windows": int(
+                val("repro_serving_spec_windows_total")),
+            "n_spec_fallbacks": int(
+                val("repro_serving_spec_fallbacks_total")),
             "spec_accept_rate": (
-                self.spec_tokens_accepted / self.spec_tokens_proposed
-                if self.spec_tokens_proposed else 0.0),
-            "spec_draft_time_s": self.spec_draft_time_s,
-            "spec_verify_time_s": self.spec_verify_time_s,
+                val("repro_serving_spec_tokens_accepted_total") / proposed
+                if proposed else 0.0),
+            "spec_draft_time_s": val(
+                "repro_serving_spec_draft_time_s_total"),
+            "spec_verify_time_s": val(
+                "repro_serving_spec_verify_time_s_total"),
+            "jit_cache": jit_cache_stats(),
         }

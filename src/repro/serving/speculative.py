@@ -214,3 +214,19 @@ def verify_tokens(params, cfg, pc, tokens, d_toks, d_probs, cache, table,
         jnp.arange(k + 1)[None] == a[:, None], corr[:, None], emitted)
     lps = jnp.take_along_axis(logp, emitted[..., None], axis=-1)[..., 0]
     return emitted, a + 1, lps, cache
+
+
+# ---------------------------------------------------------------------------
+# host-side obs accounting
+# ---------------------------------------------------------------------------
+
+def record_window(accept_hist, window_hist, k: int, n_emit: int,
+                  committed: int) -> int:
+    """Per-slot window accounting on the host (everything above is
+    jitted, so acceptance statistics are recorded here, after
+    ``device_get``): observe the accepted/proposed ratio and the
+    committed window size. Returns the accepted-draft-token count."""
+    accepted = int(n_emit) - 1
+    accept_hist.observe(accepted / k if k else 0.0)
+    window_hist.observe(committed)
+    return accepted

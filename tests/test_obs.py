@@ -1,0 +1,336 @@
+"""repro.obs: registry semantics, percentile correctness, cardinality
+guard, disabled-mode zero-cost path, Chrome-trace export, Prometheus
+exposition, and end-to-end serving instrumentation (spec on and off)
+plus the ``launch/serve.py --obs --trace`` smoke."""
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.obs.metrics import (
+    MAX_LABEL_SETS, NULL, Histogram, Registry, log_buckets)
+from repro.obs.trace import NULL_CTX, NULL_TRACER, Tracer
+from repro.serving import PagedConfig, SamplingParams, Server
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_smoke("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_semantics():
+    reg = Registry()
+    c = reg.counter("c", "help")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("g")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value == 3.0
+    # idempotent getters: same name -> same instrument
+    assert reg.counter("c") is c
+    # kind mismatch raises
+    with pytest.raises(ValueError):
+        reg.gauge("c")
+
+
+def test_histogram_buckets_and_exact_stats():
+    reg = Registry()
+    h = reg.histogram("h", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.sum == pytest.approx(105.0)
+    assert h.min == 0.5 and h.max == 100.0
+    # bucket_counts are per-bucket (cumulative only at exposition)
+    assert h.bucket_counts == [1, 1, 1, 1]
+    snap = h.snapshot()
+    assert snap["type"] == "histogram" and snap["count"] == 4
+
+
+def test_histogram_percentiles_exact_below_reservoir():
+    h = Histogram("p", buckets=log_buckets())
+    xs = list(range(1, 101))              # 1..100
+    np.random.RandomState(0).shuffle(xs)
+    for v in xs:
+        h.observe(float(v))
+    assert h.percentile(50) == 50.0
+    assert h.percentile(90) == 90.0
+    assert h.percentile(99) == 99.0
+    ps = h.percentiles()
+    assert ps == {"p50": 50.0, "p90": 90.0, "p99": 99.0}
+
+
+def test_histogram_reservoir_stays_bounded():
+    h = Histogram("r", buckets=(1.0,), reservoir_size=64)
+    for v in range(1000):
+        h.observe(float(v))
+    assert len(h._reservoir) == 64
+    assert h.count == 1000
+    # percentiles remain sane estimates from the uniform subsample
+    assert 200 < h.percentile(50) < 800
+
+
+def test_label_cardinality_guard_raises():
+    reg = Registry()
+    fam = reg.counter("lab", labels=("who",))
+    for i in range(MAX_LABEL_SETS):
+        fam.labels(who=f"u{i}").inc()
+    with pytest.raises(ValueError):
+        fam.labels(who="overflow")
+    # extra label names also raise
+    with pytest.raises(ValueError):
+        fam.labels(who="u0", extra="x")
+
+
+def test_label_overflow_drop_degrades_to_null():
+    reg = Registry()
+    fam = reg.histogram("shapes", labels=("shape",), overflow="drop")
+    for i in range(MAX_LABEL_SETS):
+        fam.labels(shape=f"{i}x{i}").observe(1.0)
+    assert fam.labels(shape="too-many") is NULL
+    fam.labels(shape="too-many").observe(1.0)   # silently dropped
+
+
+def test_disabled_registry_allocates_nothing():
+    reg = Registry(enabled=False)
+    # every getter returns THE shared NULL singleton — no instrument,
+    # no child, no per-call allocation
+    assert reg.counter("x") is NULL
+    assert reg.histogram("y") is NULL
+    assert reg.counter("x", labels=("a",)).labels(a=1) is NULL
+    reg.counter("x").inc()
+    reg.histogram("y").observe(0.5)
+    assert reg.snapshot() == {}
+    assert NULL.value == 0.0
+
+
+def test_snapshot_shape():
+    reg = Registry()
+    reg.counter("a").inc(2)
+    reg.histogram("b", labels=("k",)).labels(k="v").observe(1.0)
+    snap = reg.snapshot()
+    assert snap["a"] == {"type": "counter", "value": 2.0}
+    assert snap["b"]["type"] == "labeled_histogram"
+    assert snap["b"]["children"]["k=v"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# exports
+# ---------------------------------------------------------------------------
+
+def test_prometheus_exposition():
+    reg = Registry()
+    reg.counter("req_total", "requests").inc(3)
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    fam = reg.gauge("occ", labels=("pool",))
+    fam.labels(pool="kv").set(7)
+    text = obs.to_prometheus(reg)
+    assert "# TYPE req_total counter" in text
+    assert "req_total 3.0" in text
+    # cumulative buckets + +Inf == count
+    assert 'lat_s_bucket{le="0.1"} 1' in text
+    assert 'lat_s_bucket{le="1"} 2' in text
+    assert 'lat_s_bucket{le="+Inf"} 3' in text
+    assert "lat_s_count 3" in text
+    assert 'occ{pool="kv"} 7.0' in text
+
+
+def test_jsonl_log_roundtrip(tmp_path):
+    p = str(tmp_path / "events.jsonl")
+    log = obs.JsonlLog(p)
+    log.log("request", rid=1, tokens=4)
+    log.log("stats", tok_s=12.5)
+    log.close()
+    lines = [json.loads(x) for x in open(p).read().splitlines()]
+    assert [e["kind"] for e in lines] == ["request", "stats"]
+    assert lines[0]["rid"] == 1 and "ts" in lines[0]
+
+
+def test_write_all_artifact_set(tmp_path):
+    reg = Registry()
+    reg.counter("a").inc()
+    tr = Tracer()
+    with tr.span("stage"):
+        pass
+    written = obs.write_all(str(tmp_path), registry=reg, tracer=tr)
+    assert set(written) == {"metrics", "prometheus", "trace"}
+    assert json.load(open(written["metrics"]))["a"]["value"] == 1.0
+    assert json.load(open(written["trace"]))["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_roundtrip_and_nesting():
+    tr = Tracer(process="test")
+    tr.name_track(1, "req 0")
+    with tr.span("outer", track=1):
+        with tr.span("inner", track=1) as s:
+            s.set(k=3)
+        tr.event("tick", track=1, n=1)
+    doc = json.loads(json.dumps(tr.to_chrome_trace()))
+    evs = doc["traceEvents"]
+    X = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(X) == {"outer", "inner"}
+    # well-nested: inner lies within [outer.ts, outer.ts + outer.dur]
+    o, i = X["outer"], X["inner"]
+    assert o["ts"] <= i["ts"]
+    assert i["ts"] + i["dur"] <= o["ts"] + o["dur"] + 1e-3
+    assert i["args"] == {"k": 3}
+    names = {e["args"]["name"] for e in evs if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert {"engine", "req 0"} <= names
+    assert any(e["ph"] == "i" and e["name"] == "tick" for e in evs)
+
+
+def test_tracer_durations_and_decorator():
+    tr = Tracer()
+
+    @tr.wrap("work")
+    def work():
+        return 42
+
+    assert work() == 42 and work() == 42
+    d = tr.durations()
+    assert set(d) == {"work"} and d["work"] >= 0.0
+
+
+def test_disabled_tracer_is_null():
+    tr = Tracer(enabled=False)
+    assert tr.span("x") is NULL_CTX
+    tr.add_span("x", 0.0, 1.0)
+    tr.event("y")
+    assert tr.spans == [] and tr.events == []
+    assert NULL_TRACER.span("z") is NULL_CTX
+
+
+# ---------------------------------------------------------------------------
+# end-to-end serving instrumentation
+# ---------------------------------------------------------------------------
+
+def _drive(params, cfg, *, spec: bool, tracer=None):
+    pc = PagedConfig.sized_for(40, 4)
+    srv = Server(params, cfg, pc, max_concurrency=4,
+                 draft_params=params if spec else None,
+                 spec_k=2 if spec else 0, tracer=tracer)
+    rng = np.random.RandomState(0)
+    for i in range(5):
+        srv.submit(rng.randint(0, cfg.vocab_size, size=7).tolist(),
+                   max_new_tokens=6,
+                   sampling=SamplingParams(temperature=0.0, seed=i))
+    srv.drain()
+    return srv
+
+
+@pytest.mark.parametrize("spec", [False, True])
+def test_server_histograms_populate(olmo, spec):
+    cfg, params = olmo
+    srv = _drive(params, cfg, spec=spec)
+    snap = srv.obs.snapshot()
+    assert snap["repro_serving_ttft_s"]["count"] == 5
+    assert snap["repro_serving_tpot_s"]["count"] > 0
+    assert snap["repro_serving_tokens_generated_total"]["value"] == 30
+    assert snap["repro_serving_requests_completed_total"]["value"] == 5
+    # pool gauges: occupancy returns to zero after drain, but traffic
+    # counters prove the allocator recorded
+    assert snap["repro_serving_pool_blocks_used"]["value"] == 0
+    assert snap["repro_serving_pool_alloc_total"]["value"] > 0
+    assert snap["repro_serving_pool_free_total"]["value"] > 0
+    if spec:
+        assert snap["repro_serving_spec_windows_total"]["value"] > 0
+        assert snap["repro_serving_spec_accept_rate"]["count"] > 0
+        assert snap["repro_serving_pool_fork_total"]["value"] > 0
+    st = srv.stats()
+    for k in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+              "tokens_per_s_busy", "busy_time_s", "pool_blocks_used",
+              "jit_cache"):
+        assert k in st
+    assert st["tokens_generated"] == 30 and st["completed"] == 5
+    assert 0.0 < st["ttft_p50_s"] <= st["ttft_max_s"]
+    assert st["busy_time_s"] <= max(st["elapsed_s"], st["busy_time_s"])
+    assert st["tokens_per_s_busy"] >= st["tokens_per_s"] * 0.99
+
+
+def test_server_request_lifecycle_spans(olmo):
+    cfg, params = olmo
+    tr = Tracer(process="test-serve")
+    srv = _drive(params, cfg, spec=False, tracer=tr)
+    del srv
+    names = {s["name"] for s in tr.spans}
+    assert {"queued", "request", "prefill", "decode_window"} <= names
+    # every request lane got its whole-lifetime span
+    reqs = [s for s in tr.spans if s["name"] == "request"]
+    assert len(reqs) == 5
+    assert all(s["track"] >= 1 and s["dur"] > 0 for s in reqs)
+    # export parses
+    doc = json.loads(json.dumps(tr.to_chrome_trace()))
+    assert len(doc["traceEvents"]) > 10
+
+
+def test_serve_cli_obs_smoke(tmp_path):
+    """launch/serve.py --obs --trace writes a non-empty, parseable
+    Chrome trace + metrics artifacts (the CI tier-1 smoke)."""
+    from repro.launch.serve import main as serve_main
+    out = str(tmp_path / "obs")
+    stats = serve_main([
+        "--arch", "olmo-1b", "--smoke", "--n-requests", "4",
+        "--new-tokens", "4", "--max-concurrency", "2",
+        "--obs", "--trace", "--obs-out", out])
+    try:
+        assert stats["completed"] == 4
+        assert stats["ttft_p99_s"] >= stats["ttft_p50_s"] > 0.0
+        trace = json.load(open(os.path.join(out, "trace.json")))
+        assert len(trace["traceEvents"]) > 0
+        assert any(e.get("ph") == "X" for e in trace["traceEvents"])
+        metrics = json.load(open(os.path.join(out, "metrics.json")))
+        assert metrics["repro_serving_ttft_s"]["count"] == 4
+        events = [json.loads(x) for x in
+                  open(os.path.join(out, "events.jsonl"))]
+        assert [e["kind"] for e in events].count("request") == 4
+        assert events[-1]["kind"] == "stats"
+        assert os.path.exists(os.path.join(out, "metrics.prom"))
+    finally:
+        # --obs flips the process-wide default registry on; leave the
+        # suite the way we found it
+        obs.default_registry().reset()
+        obs.disable()
+
+
+def test_stats_shape_backward_compatible(olmo):
+    cfg, params = olmo
+    srv = _drive(params, cfg, spec=False)
+    st = srv.stats()
+    legacy = {"completed", "tokens_generated", "elapsed_s",
+              "tokens_per_s", "ttft_mean_s", "ttft_max_s",
+              "queue_depth_mean", "queue_depth_max", "n_prefill_steps",
+              "n_decode_steps", "n_preemptions", "cache_bytes",
+              "prefill_time_s", "decode_time_s", "decode_tok_s",
+              "gathered_bytes_per_step", "spec_k", "n_spec_windows",
+              "n_spec_fallbacks", "spec_accept_rate",
+              "spec_draft_time_s", "spec_verify_time_s"}
+    assert legacy <= set(st)
+    # legacy attribute views still read correctly
+    assert srv.tokens_generated == st["tokens_generated"]
+    assert srv.n_decode_steps == st["n_decode_steps"]
+    assert math.isclose(srv.decode_time_s, st["decode_time_s"])
