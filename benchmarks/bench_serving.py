@@ -42,12 +42,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.attention import use_paged_kernel
 from repro.configs import get_smoke
 from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
 from repro.launch.serve import make_workload
 from repro.launch.serve import run_continuous as drive_server
-from repro.kernels.paged_attention import use_paged_kernel
 from repro.models import init_params
 from repro.serve.engine import generate
 from repro.serving import PagedConfig, Server
@@ -233,6 +233,84 @@ def _spec_scenario(quick: bool = True):
     return runs, summary
 
 
+def _long_prompt_scenario():
+    """Long-prompt TTFT: rank-space fold prefill vs the reconstruct
+    oracle (``REPRO_PREFILL_BACKEND``) on the zoo config with CUR-KV at
+    half rank. The 4k-token prompt makes prefill attention the TTFT
+    cost, so folding Uk/Uv into the prompt pass (attend at feature dim
+    r, scatter the same compressed blocks — zero full-head-dim KV bytes)
+    is measured directly against the reconstruct-then-attend path it
+    replaced. Greedy outputs are compared across backends (the
+    ``bit_identical`` flag is a check, not an assumption). Interleaved
+    median-of-3; ``prefill_tok_s`` counts prompt tokens per second of
+    prefill phase."""
+    import os
+    from repro.configs import get_repro
+    zcfg = get_repro()
+    params = init_params(jax.random.PRNGKey(2), zcfg)
+    C = 2
+    plen, max_new = 4096, 16
+    rng = np.random.default_rng(7)
+    wl = [{"prompt": rng.integers(0, zcfg.vocab_size, plen).tolist(),
+           "max_new_tokens": max_new, "arrival_offset_s": 0.0}
+          for _ in range(C)]
+    pc = _paged_config(wl, C, cur_kv=True,
+                       kv_rank=max(1, zcfg.resolved_head_dim // 2))
+
+    def serve_once(backend):
+        prev = os.environ.get("REPRO_PREFILL_BACKEND")
+        os.environ["REPRO_PREFILL_BACKEND"] = backend
+        try:
+            srv = Server(params, zcfg, pc, max_concurrency=C)
+            drive_server(srv, wl, verbose=False)
+            st = srv.stats()
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_PREFILL_BACKEND", None)
+            else:
+                os.environ["REPRO_PREFILL_BACKEND"] = prev
+        out = {r.rid: tuple(r.out_tokens) for r in srv.finished.values()}
+        pt = st["prefill_time_s"]
+        return out, {
+            "engine": f"long-prompt/{st['prefill_backend']}",
+            "prefill_backend": st["prefill_backend"],
+            "prompt_len": plen,
+            "prefill_time_s": pt,
+            "prefill_tok_s": (C * plen / pt) if pt > 0 else 0.0,
+            "ttft_p50_s": st["ttft_p50_s"],
+            "ttft_mean_s": st["ttft_mean_s"],
+            "reconstructed_bytes_per_prefill":
+                st["reconstructed_bytes_per_prefill"]}
+
+    backends = ["fold", "reconstruct"]
+    outs = {}
+    for b in backends:                   # warm pass (compile excluded)
+        outs[b], _ = serve_once(b)
+    reps = [[serve_once(b)[1] for b in backends] for _ in range(3)]
+    rows = []
+    for bi, b in enumerate(backends):
+        med = sorted((reps[r][bi] for r in range(3)),
+                     key=lambda r: r["prefill_tok_s"])[1]
+        med["bit_identical"] = outs[b] == outs["fold"]
+        rows.append(med)
+    fold, recon = rows
+    summary = {
+        "prompt_len": plen, "concurrency": C,
+        "kv_rank": pc.kv_rank,
+        "fold_prefill_tok_s": fold["prefill_tok_s"],
+        "reconstruct_prefill_tok_s": recon["prefill_tok_s"],
+        "prefill_speedup": (fold["prefill_tok_s"]
+                            / recon["prefill_tok_s"]
+                            if recon["prefill_tok_s"] else 0.0),
+        "fold_ttft_p50_s": fold["ttft_p50_s"],
+        "reconstruct_ttft_p50_s": recon["ttft_p50_s"],
+        "fold_reconstructed_bytes":
+            fold["reconstructed_bytes_per_prefill"],
+        "bit_identical": recon["bit_identical"],
+    }
+    return rows, summary
+
+
 def _bench(quick: bool = True):
     cfg = get_smoke(ARCH)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -306,6 +384,13 @@ def _bench(quick: bool = True):
     results["scenarios"].append({"mix": "zoo-long-decode", "runs": [zoo]})
     results["zoo_decode_tok_s"] = zoo["decode_tok_s"]
 
+    # long-prompt prefill scenario: rank-space fold vs reconstruct
+    # oracle TTFT on a >= 4k prompt (the fold acceptance metric)
+    lp_runs, lp_summary = _long_prompt_scenario()
+    results["scenarios"].append({"mix": "long-prompt-prefill",
+                                 "runs": lp_runs})
+    results["long_prompt"] = lp_summary
+
     # speculative long-decode (trained zoo model, stop-token workload)
     spec_runs, spec_summary = _spec_scenario(quick)
     results["scenarios"].append({"mix": "spec-long-decode",
@@ -356,6 +441,14 @@ def _bench(quick: bool = True):
                  f"tpot_p99={stag[0]['tpot_p99_s']*1e3:.1f}ms"))
     rows.append(("serving/continuous_speedup", 0.0, f"{speedup:.2f}x"))
     rows.append(("serving/curkv_cache_ratio", 0.0, f"{kv_ratio:.2f}"))
+    for r in lp_runs:
+        rows.append((f"serving/{r['engine']}",
+                     1e6 * r["prefill_time_s"] / (r["prompt_len"] * 2),
+                     f"{r['prefill_tok_s']:.0f}tok/s "
+                     f"ttft_p50={r['ttft_p50_s']*1e3:.0f}ms"))
+    rows.append(("serving/long_prompt_prefill_speedup", 0.0,
+                 f"{lp_summary['prefill_speedup']:.2f}x "
+                 f"identical={lp_summary['bit_identical']}"))
     for r in spec_runs:
         rows.append((f"serving/spec/{r['engine']}",
                      (1e6 * r["decode_time_s"]

@@ -1,0 +1,49 @@
+"""repro.attention — the attention-backend registry.
+
+One resolution point for every attention variant from model to paged
+pool; see :mod:`repro.attention.registry` for the variant/backend/gate
+map and :mod:`repro.attention.prefill` for the rank-space prefill
+backends registered here (registration lives in this ``__init__`` so the
+``prefill`` module can call back into ``registry.mix`` without an import
+cycle — importing any submodule runs this package init first, so the
+registry is always fully populated).
+"""
+from repro.attention import xla
+from repro.attention import registry
+from repro.attention import prefill
+from repro.attention.registry import (
+    Backend, Caps, backends, describe, fold_q, mix, prefill_backend_mode,
+    resolve, resolve_paged, resolve_prefill, unfold_o, use_flash_kernel,
+    use_paged_kernel, variants)
+
+registry.register("paged_prefill", registry.Backend(
+    "rank_fold", "xla",
+    registry.Caps(window=True, rank_space=True, paged=True),
+    prefill.fold_prefill,
+    available=lambda ctx: ctx.get("force", "auto") != "reconstruct",
+    gate="REPRO_PREFILL_BACKEND=auto|fold|reconstruct (auto: fold)"))
+registry.register("paged_prefill", registry.Backend(
+    "reconstruct", "oracle",
+    registry.Caps(window=True, rank_space=True, paged=True),
+    prefill.reconstruct_prefill,
+    gate="REPRO_PREFILL_BACKEND=reconstruct"))
+
+__all__ = [
+    "Backend",
+    "Caps",
+    "backends",
+    "describe",
+    "fold_q",
+    "mix",
+    "prefill",
+    "prefill_backend_mode",
+    "registry",
+    "resolve",
+    "resolve_paged",
+    "resolve_prefill",
+    "unfold_o",
+    "use_flash_kernel",
+    "use_paged_kernel",
+    "variants",
+    "xla",
+]

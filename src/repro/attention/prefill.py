@@ -1,0 +1,86 @@
+"""Rank-space prefill backends for CUR-KV paged pools.
+
+PR 5 moved *decode* into rank space (fold the key link matrix Uk into the
+query, apply the value link Uv after the softmax). Prefill kept the old
+two-pass shape: attend the raw full-head-dim K/V, then compress and write
+the pool in a separate pass, and finally recompute the last position
+through the pool so the sampled token saw the compressed cache. This
+module generalizes the fold to the ragged-bucket prompt case and deletes
+the double write:
+
+``rank_fold`` (the default):
+    q̃ = scale * q @ Ukᵀ          (B, S, K, G, r)
+    k_c = k[..., qk], v_c = v[..., qv]   (B, S, K, r)  — the DEIM columns
+    o  = softmax(q̃ k_cᵀ) v_c @ Uv
+
+  Attention runs at feature dim **r** with ``scale=1.0`` (the scale is
+  folded into q̃) through whatever ``mix`` backend the registry resolves,
+  and the SAME ``(B, S, K, r)`` compressed arrays are scattered to the
+  pool — one pass, zero full-head-dim bytes, and no last-position splice:
+  every prompt position already attends the exact compressed K/V that
+  decode will read, so prefill logits and pool state agree by
+  construction.
+
+``reconstruct`` (the oracle):
+    k̂ = k_c @ Uk, v̂ = v_c @ Uv, then ordinary full-head-dim attention.
+
+  Algebraically identical to ``rank_fold`` at any rank (the fold is just
+  reassociation of the same matrix products), kept as the
+  calibration/test oracle and the TTFT baseline the long-prompt benchmark
+  measures the fold against. This is the only place the CUR-KV prefill
+  path is allowed to materialize full-head-dim K/V.
+
+Both backends return ``(o, k_c, v_c)`` so the runtime scatters the
+compressed blocks without re-deriving them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.attention import registry
+from repro.attention.registry import fold_q, unfold_o
+
+
+def _compress(x, idx):
+    """(..., hd) -> (..., r): keep the DEIM-selected feature columns."""
+    return jnp.take(x, idx, axis=-1)
+
+
+def fold_prefill(qg, k, v, positions, window: int, scale: float, cfg,
+                 proj):
+    """Rank-space prompt attention. qg (B,S,K,G,hd); k,v (B,S,K,hd);
+    proj = (qk, uk, qv, uv). Returns (o (B,S,K,G,hd), k_c, v_c)."""
+    qk, uk, qv, uv = proj
+    kc = _compress(k, qk)
+    vc = _compress(v, qv)
+    qf = fold_q(qg, uk, scale)
+    o_r = registry.mix(qf, kc, vc, positions, window, 1.0, cfg)
+    return unfold_o(o_r, uv), kc, vc
+
+
+def reconstruct_prefill(qg, k, v, positions, window: int, scale: float,
+                        cfg, proj):
+    """Reconstruct-then-attend oracle: same math as :func:`fold_prefill`
+    with the link matrices applied to K/V instead of q/o."""
+    qk, uk, qv, uv = proj
+    kc = _compress(k, qk)
+    vc = _compress(v, qv)
+    kh = (kc.astype(jnp.float32) @ uk.astype(jnp.float32)).astype(k.dtype)
+    vh = (vc.astype(jnp.float32) @ uv.astype(jnp.float32)).astype(v.dtype)
+    o = registry.mix(qg, kh, vh, positions, window, scale, cfg)
+    return o, kc, vc
+
+
+def reconstructed_bytes_per_prefill(cfg, pc, batch: int, bucket: int,
+                                    backend: str = "rank_fold") -> int:
+    """Full-head-dim KV bytes a CUR-KV prefill materializes per bucket-
+    padded prompt batch — the acceptance metric for the fold path, which
+    must report **0** (dense pools also report 0: nothing is
+    reconstructed, the raw K/V is the payload)."""
+    if not pc.cur_kv or backend in ("rank_fold", "fold", "auto"):
+        return 0
+    from repro.serving.paged_cache import _attn_layers
+    L = _attn_layers(cfg)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return (2 * L * batch * bucket * cfg.n_kv_heads
+            * cfg.resolved_head_dim * itemsize)

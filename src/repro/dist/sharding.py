@@ -320,7 +320,8 @@ def _paged_leaf_spec(path, leaf, cfg: ModelConfig, mesh,
     then the block pool). CUR-KV projections and block tables replicate
     (tiny / host-managed).
 
-    ``kernel=True`` (the ``REPRO_PAGED_KERNEL`` Pallas decode path): the
+    ``kernel=True`` (the ``paged_pallas`` decode backend, resolved by the
+    attention registry's ``REPRO_PAGED_KERNEL`` gate): the
     kernel grids over (slot, kv-head, block) and holds a whole
     ``(block_size, r)`` tile per step, so kv-heads is the ONLY pool axis
     it can shard — the rank/block-pool fallbacks would split in-kernel

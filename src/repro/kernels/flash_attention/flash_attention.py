@@ -80,8 +80,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    bq: int = 128, bk: int = 128, interpret: bool = False):
+                    bq: int = 128, bk: int = 128, scale=None,
+                    interpret: bool = False):
     """q (B,H,S,d); k,v (B,K,S,d), H = K*G -> (B,H,S,d).
+
+    ``scale=None`` uses 1/sqrt(d); the rank-space prefill path attends at
+    feature dim r with the scale folded into q and passes 1.0 explicitly.
 
     Ragged S (not a multiple of the block sizes) pads q/k/v up to the
     block grid and slices the output back — the same pad-and-slice path
@@ -107,7 +111,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         k = jnp.pad(k, pad)
         v = jnp.pad(v, pad)
     nq, nk = Sq // bq, Sk // bk
-    scale = d ** -0.5
+    if scale is None:
+        scale = d ** -0.5
 
     kernel = functools.partial(
         _kernel, scale=scale, bq=bq, bk=bk, nk=nk,

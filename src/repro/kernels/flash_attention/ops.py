@@ -1,4 +1,9 @@
-"""Jit'd wrapper for the flash attention kernel (interpret mode off-TPU)."""
+"""Jit'd wrapper for the flash attention kernel (interpret mode off-TPU).
+
+Dispatch is owned by the attention-backend registry
+(``repro.attention.registry``, gate ``REPRO_FLASH_KERNEL``); this module
+is the raw op only.
+"""
 from __future__ import annotations
 
 import functools
@@ -13,8 +18,13 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "window", "bq", "bk"))
+                   static_argnames=("causal", "window", "bq", "bk",
+                                    "scale"))
 def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
-                       bq: int = 128, bk: int = 128):
+                       bq: int = 128, bk: int = 128, scale=None):
+    """``scale=None`` uses 1/sqrt(d). The rank-space prefill path passes
+    an explicit scale (folded queries attend at feature dim r with the
+    full-head-dim scale already applied, so it passes 1.0)."""
     return flash_attention(q, k, v, causal=causal, window=window,
-                           bq=bq, bk=bk, interpret=not _on_tpu())
+                           bq=bq, bk=bk, scale=scale,
+                           interpret=not _on_tpu())

@@ -1,6 +1,5 @@
 from repro.kernels.paged_attention.ops import (
-    fold_q, paged_attention_op, paged_attention_ref, paged_kernel_mode,
-    unfold_o, use_paged_kernel)
+    fold_q, paged_attention_op, paged_attention_ref, unfold_o)
 
 __all__ = ["fold_q", "paged_attention_op", "paged_attention_ref",
-           "paged_kernel_mode", "unfold_o", "use_paged_kernel"]
+           "unfold_o"]

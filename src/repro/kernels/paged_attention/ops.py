@@ -1,19 +1,18 @@
-"""Jit'd wrapper + dispatch gate for the paged-attention decode kernel.
+"""Jit'd wrapper for the paged-attention decode kernel.
 
 On TPU the Pallas kernel runs compiled; everywhere else it runs in
 interpret mode — same kernel body, so correctness is validated against
 ``ref.py`` on any backend.
 
-REPRO_PAGED_KERNEL: "auto" (default) dispatches the serving decode hot
-path to the kernel on TPU only; "1" forces it (interpret mode off-TPU —
-the parity tests); "0" forces the rank-space XLA reference path. The
-gate resolves at trace time, so ``serving.server`` keys its jit cache on
-it (same contract as PR 3's REPRO_CUR_KERNEL).
+Dispatch (kernel vs. the rank-space XLA reference) is owned by the
+attention-backend registry: ``repro.attention.registry`` gates this op
+behind ``REPRO_PAGED_KERNEL`` and serves it as the ``paged_decode``
+variant's ``paged_pallas`` backend. This module deliberately holds no
+gate logic — it is the raw op only.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 
@@ -21,25 +20,9 @@ from repro.kernels.paged_attention.paged_attention import paged_attention
 from repro.kernels.paged_attention.ref import (     # noqa: F401 (re-export)
     fold_q, paged_attention_ref, unfold_o)
 
-_PAGED_KERNEL_ENV = "REPRO_PAGED_KERNEL"
-
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def paged_kernel_mode() -> str:
-    return os.environ.get(_PAGED_KERNEL_ENV, "auto")
-
-
-def use_paged_kernel() -> bool:
-    """Trace-time gate for the block-table Pallas decode kernel."""
-    mode = paged_kernel_mode()
-    if mode == "0":
-        return False
-    if mode == "1":
-        return True
-    return _on_tpu()
 
 
 @functools.partial(jax.jit, static_argnames=("window", "q_span"))

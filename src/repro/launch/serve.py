@@ -3,14 +3,17 @@ CUR-compressed) model with a paged, optionally CUR-compressed KV cache.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
       --max-concurrency 8 [--cur-layers 2] [--cur-kv] [--block-size 16] \
-      [--paged-kernel auto|on|off]
+      [--paged-kernel auto|on|off] [--prefill-backend auto|fold|reconstruct]
 
 ``--smoke`` drives a mixed workload — ragged prompt lengths, staggered
 arrivals, per-request generation budgets — through the
 ``repro.serving.Server``. ``--legacy`` (or a non-attention arch, e.g.
 mamba) falls back to the static-batch ``serve.engine.generate`` path.
 ``--paged-kernel`` sets REPRO_PAGED_KERNEL (the block-table Pallas
-decode-attention kernel; auto = TPU only) before the server compiles.
+decode-attention kernel; auto = TPU only) and ``--prefill-backend`` sets
+REPRO_PREFILL_BACKEND (CUR-KV prompt attention: rank-space fold vs the
+reconstruct oracle) before the server compiles; both resolve through the
+attention-backend registry (``repro.attention``).
 
 Speculative decoding: ``--draft <dir> --spec-k K`` loads a CURed draft
 checkpoint (written by ``launch/cure.py --emit-draft``, restored through
@@ -119,6 +122,13 @@ def main(argv=None):
                          "attention (auto: TPU only; on forces interpret "
                          "mode off-TPU). Unset: an exported "
                          "REPRO_PAGED_KERNEL is honored as-is")
+    ap.add_argument("--prefill-backend", default=None,
+                    choices=["auto", "fold", "reconstruct"],
+                    help="REPRO_PREFILL_BACKEND: CUR-KV prompt attention "
+                         "backend (auto = rank-space fold; reconstruct "
+                         "keeps the full-head-dim oracle). Unset: an "
+                         "exported REPRO_PREFILL_BACKEND is honored "
+                         "as-is")
     ap.add_argument("--legacy", action="store_true",
                     help="seed static-batch engine instead of the "
                          "continuous-batching runtime")
@@ -150,6 +160,8 @@ def main(argv=None):
     if args.paged_kernel is not None:
         os.environ["REPRO_PAGED_KERNEL"] = {
             "auto": "auto", "on": "1", "off": "0"}[args.paged_kernel]
+    if args.prefill_backend is not None:
+        os.environ["REPRO_PREFILL_BACKEND"] = args.prefill_backend
     if args.obs:
         obs.enable()
     tracer = obs.Tracer(enabled=args.trace, process="repro.serve")
@@ -231,11 +243,13 @@ def main(argv=None):
                     # process-wide registry, so one export carries both
                     obs=obs.default_registry() if args.obs else None,
                     tracer=tracer)
-    from repro.serving.runtime import use_paged_kernel
+    from repro.attention import use_paged_kernel
     print(f"serving {args.n_requests} requests "
           f"(concurrency {args.max_concurrency}, block {args.block_size}, "
           f"pool {pc.n_blocks} blocks, cur_kv={args.cur_kv}, "
-          f"paged_kernel={'on' if use_paged_kernel() else 'off'}"
+          f"paged_kernel={'on' if use_paged_kernel() else 'off'}, "
+          f"prefill={server._prefill_backend}"
+          + (f", window={server.window}" if server.window else "")
           + (f", spec_k={server.spec_k}" if server.spec_k else "") + ")")
     with prof.scope("serve"):
         finished, stats = run_continuous(server, workload,

@@ -1,33 +1,35 @@
-"""GQA attention with RoPE: dense, chunked-flash, banded-local and decode
-paths.
+"""GQA attention with RoPE: projections, cache plumbing and decode.
 
-Path selection (``attn_forward``):
-  - S <= DENSE_MAX: dense masked softmax (smoke tests, short seqs).
-  - full attention, long S: nested chunked online-softmax (flash-style) —
-    memory O(chunk^2), lowers to compact scanned HLO for the dry-run. The
-    Pallas TPU kernel in ``repro.kernels.flash_attention`` implements the
-    same math for real hardware.
-  - sliding-window attention, long S: banded path — each query chunk attends
-    to a static (window + chunk)-wide KV slice, structurally skipping
-    out-of-window chunks (sub-quadratic compute AND memory).
+The full-sequence attention math itself lives in the backend registry
+(``repro.attention``): :func:`_mix` resolves the ``mix`` variant —
+Pallas flash kernel (``REPRO_FLASH_KERNEL``) when gated on, else the
+small-S dense oracle, else the chunked/banded XLA paths that used to be
+defined in this module (now ``repro.attention.xla``). ``DENSE_MAX`` and
+``CHUNK`` stay as module globals here because tests and the dry-run
+tooling monkeypatch them; ``_mix`` threads the live values through the
+registry on every call.
 
-Decode (``attn_decode``): one query token vs a KV cache; local layers use a
-ring buffer of size ``window`` so 500k-token contexts keep O(window) state.
+Decode (``attn_decode``): one query token vs a KV cache; local layers use
+a ring buffer of size ``window`` so 500k-token contexts keep O(window)
+state. (The paged serving runtime has its own pool-backed decode path —
+see ``repro.serving.runtime`` — which resolves through the same
+registry's ``paged_decode`` variant.)
 """
 from __future__ import annotations
-
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.attention import registry as attn_registry
+from repro.attention import xla as attn_xla
+# back-compat aliases: tests exercise the XLA paths through this module
+from repro.attention.xla import (     # noqa: F401 (re-export)
+    NEG_INF, banded_attn as _banded_attn, dense_attn as _dense_attn,
+    flash_attn as _flash_attn)
 from repro.models.layers import apply_w, apply_rope, rms_norm
 
-DENSE_MAX = 2048     # use dense softmax at or below this sequence length
-CHUNK = 512          # flash chunk (query and kv)
-
-NEG_INF = -1e30
+DENSE_MAX = attn_xla.DENSE_MAX   # dense softmax at/below this seq length
+CHUNK = attn_xla.CHUNK           # flash chunk (query and kv)
 
 
 # ---------------------------------------------------------------------------
@@ -56,163 +58,13 @@ def _group_q(q, n_kv):
 
 
 # ---------------------------------------------------------------------------
-# dense path
-# ---------------------------------------------------------------------------
-
-def _dense_attn(q, k, v, q_pos, kv_pos, window: int, scale: float):
-    """q (B,Sq,K,G,hd); k,v (B,Skv,K,hd); positions (B,Sq)/(B,Skv)."""
-    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k).astype(jnp.float32) * scale
-    mask = kv_pos[:, None, :] <= q_pos[:, :, None]            # causal
-    if window > 0:
-        mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
-    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
-    return o
-
-
-# ---------------------------------------------------------------------------
-# chunked flash path (full causal)
-# ---------------------------------------------------------------------------
-
-def _flash_chunk_update(carry, s, v_chunk):
-    """Online softmax update. carry: (m, l, acc); s: (B,K,G,cq,ck) f32."""
-    m, l, acc = carry
-    m_new = jnp.maximum(m, s.max(axis=-1))
-    alpha = jnp.exp(m - m_new)
-    p = jnp.exp(s - m_new[..., None])
-    l_new = l * alpha + p.sum(axis=-1)
-    acc_new = acc * alpha[..., None] + jnp.einsum(
-        "bkgqt,btkd->bkgqd", p.astype(v_chunk.dtype), v_chunk
-    ).astype(jnp.float32)
-    return m_new, l_new, acc_new
-
-
-def _flash_attn(q, k, v, q_pos, kv_pos, scale: float, chunk: int,
-                static: bool = False):
-    """Nested-chunk online softmax. q (B,Sq,K,G,hd), k/v (B,Skv,K,hd).
-
-    ``static=True`` unrolls both chunk loops in Python and *skips* causally
-    dead (q, k) chunk pairs — the control flow the Pallas kernel executes
-    on TPU (pl.when), used by the dry-run cost compiles so HLO FLOPs count
-    loop trips and reflect causal tile skipping."""
-    B, Sq, K, G, hd = q.shape
-    Skv = k.shape[1]
-    cq = min(chunk, Sq)
-    ck = min(chunk, Skv)
-    nq, nk = Sq // cq, Skv // ck
-    qc = q.reshape(B, nq, cq, K, G, hd)
-    qp = q_pos.reshape(B, nq, cq)
-    kc = k.reshape(B, nk, ck, K, hd)
-    vc = v.reshape(B, nk, ck, K, hd)
-    kp = kv_pos.reshape(B, nk, ck)
-
-    def chunk_scores(qi, qpi, ki, kpi):
-        s = jnp.einsum("bqkgd,btkd->bkgqt", qi, ki).astype(jnp.float32)
-        s = s * scale
-        mask = kpi[:, None, :] <= qpi[:, :, None]
-        return jnp.where(mask[:, None, None, :, :], s, NEG_INF)
-
-    def per_qchunk_scan(qi, qpi):
-        m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
-        a0 = jnp.zeros((B, K, G, cq, hd), jnp.float32)
-
-        def body(carry, xs):
-            ki, vi, kpi = xs
-            s = chunk_scores(qi, qpi, ki, kpi)
-            return _flash_chunk_update(carry, s, vi), None
-
-        (m, l, acc), _ = jax.lax.scan(
-            body, (m0, l0, a0),
-            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kp.swapaxes(0, 1)))
-        o = acc / jnp.maximum(l, 1e-30)[..., None]
-        return o.transpose(0, 3, 1, 2, 4)     # -> (B,cq,K,G,hd)
-
-    if static:
-        outs = []
-        for i in range(nq):
-            qi, qpi = qc[:, i], qp[:, i]
-            carry = (jnp.full((B, K, G, cq), NEG_INF, jnp.float32),
-                     jnp.zeros((B, K, G, cq), jnp.float32),
-                     jnp.zeros((B, K, G, cq, hd), jnp.float32))
-            last_live = (i * cq + cq - 1) // ck     # causal skip beyond
-            for j in range(last_live + 1):
-                s = chunk_scores(qi, qpi, kc[:, j], kp[:, j])
-                carry = _flash_chunk_update(carry, s, vc[:, j])
-            m, l, acc = carry
-            o = acc / jnp.maximum(l, 1e-30)[..., None]
-            outs.append(o.transpose(0, 3, 1, 2, 4))
-        o = jnp.concatenate(outs, axis=1)
-        return o.reshape(B, Sq, K, G, hd).astype(q.dtype)
-
-    o = jax.lax.map(lambda t: per_qchunk_scan(t[0], t[1]),
-                    (qc.swapaxes(0, 1), qp.swapaxes(0, 1)))
-    o = o.swapaxes(0, 1).reshape(B, Sq, K, G, hd)
-    return o.astype(q.dtype)
-
-
-# ---------------------------------------------------------------------------
-# banded local path (sliding window)
-# ---------------------------------------------------------------------------
-
-def _banded_attn(q, k, v, q_pos, kv_pos, window: int, scale: float,
-                 chunk: int, static: bool = False):
-    """Sliding-window attention: query chunk i attends to the static KV
-    slice [i*cq - band, i*cq + cq). band = ceil(window/cq)*cq.
-    Structurally sub-quadratic: compute O(S * (window + chunk))."""
-    B, Sq, K, G, hd = q.shape
-    cq = min(chunk, Sq)
-    nq = Sq // cq
-    band = -(-window // cq) * cq                     # multiple of cq >= window
-    width = band + cq
-    # pad KV on the left by `band` so every slice is in-bounds & static-size
-    kpad = jnp.pad(k, ((0, 0), (band, 0), (0, 0), (0, 0)))
-    vpad = jnp.pad(v, ((0, 0), (band, 0), (0, 0), (0, 0)))
-    # padded positions: left-pad with large negative so mask kills them
-    ppad = jnp.pad(kv_pos, ((0, 0), (band, 0)), constant_values=-(10 ** 9))
-
-    qc = q.reshape(B, nq, cq, K, G, hd)
-    qp = q_pos.reshape(B, nq, cq)
-
-    def per_qchunk(i, qi, qpi):
-        start = i * cq                               # offset into padded kv
-        ks = jax.lax.dynamic_slice_in_dim(kpad, start, width, axis=1)
-        vs = jax.lax.dynamic_slice_in_dim(vpad, start, width, axis=1)
-        ps = jax.lax.dynamic_slice_in_dim(ppad, start, width, axis=1)
-        s = jnp.einsum("bqkgd,btkd->bkgqt", qi, ks).astype(jnp.float32)
-        s = s * scale
-        mask = (ps[:, None, :] <= qpi[:, :, None]) & (
-            ps[:, None, :] > qpi[:, :, None] - window)
-        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(vs.dtype), vs)
-        return o
-
-    if static:
-        outs = [per_qchunk(i, qc[:, i], qp[:, i]) for i in range(nq)]
-        o = jnp.concatenate(outs, axis=1)
-        return o.reshape(B, Sq, K, G, hd).astype(q.dtype)
-    o = jax.lax.map(
-        lambda t: per_qchunk(t[0], t[1], t[2]),
-        (jnp.arange(nq), qc.swapaxes(0, 1), qp.swapaxes(0, 1)))
-    return o.swapaxes(0, 1).reshape(B, Sq, K, G, hd).astype(q.dtype)
-
-
-# ---------------------------------------------------------------------------
 # public entry points
 # ---------------------------------------------------------------------------
 
 def _mix(qg, k, v, positions, window, scale, cfg=None):
-    S = qg.shape[1]
-    static = bool(cfg is not None and cfg.static_loops)
-    chunk = cfg.attn_chunk if cfg is not None else CHUNK
-    if S <= DENSE_MAX and not static:
-        return _dense_attn(qg, k, v, positions, positions, window, scale)
-    if window > 0:
-        return _banded_attn(qg, k, v, positions, positions, window, scale,
-                            chunk, static)
-    return _flash_attn(qg, k, v, positions, positions, scale, chunk, static)
+    """Registry-resolved full-sequence attention (see module docstring)."""
+    return attn_registry.mix(qg, k, v, positions, window, scale, cfg,
+                             dense_max=DENSE_MAX)
 
 
 def attn_forward(x, p, cfg, positions, *, window: int = 0):

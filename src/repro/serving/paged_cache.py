@@ -76,10 +76,11 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._ref: Dict[int, int] = {}
+        self.blocks_freed_window = 0   # lifetime out-of-window frees
         if obs is None:
             from repro.obs.metrics import NULL
             self._m_alloc = self._m_free = self._m_fork = NULL
-            self._m_cow = self._m_used = NULL
+            self._m_cow = self._m_used = self._m_window = NULL
         else:
             self._m_alloc = obs.counter(
                 "repro_serving_pool_alloc_total",
@@ -96,10 +97,32 @@ class BlockAllocator:
             self._m_used = obs.gauge(
                 "repro_serving_pool_blocks_used",
                 "live (referenced) pool blocks")
+            self._m_window = obs.counter(
+                "repro_serving_pool_window_freed_total",
+                "blocks freed for falling out of the sliding window")
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def used(self) -> int:
+        """Live (referenced) pool blocks — the occupancy the
+        ``repro_serving_pool_blocks_used`` gauge tracks."""
+        return self.n_blocks - len(self._free)
+
+    def assert_used(self, *, exactly: Optional[int] = None,
+                    at_most: Optional[int] = None) -> int:
+        """Occupancy invariant helper (tests / scheduler churn): checks
+        the live-block count and returns it."""
+        u = self.used
+        if exactly is not None and u != exactly:
+            raise AssertionError(
+                f"pool_blocks_used: expected exactly {exactly}, got {u}")
+        if at_most is not None and u > at_most:
+            raise AssertionError(
+                f"pool_blocks_used: expected <= {at_most}, got {u}")
+        return u
 
     def ref(self, block: int) -> int:
         return self._ref.get(block, 0)
@@ -138,6 +161,37 @@ class BlockAllocator:
         self._m_fork.inc(len(blocks))
         return list(blocks)
 
+    def free_window(self, blocks: List[int], ctx_len: int, window: int,
+                    block_size: int) -> int:
+        """Free the blocks of ``blocks`` (one slot's table row, mutated in
+        place) that have fallen wholly behind a sliding window of size
+        ``window`` at context length ``ctx_len``.
+
+        The decode mask ``idx > ctx - window`` only excludes more
+        positions as ``ctx`` grows, so block ``bi`` (covering positions
+        ``[bi*bs, (bi+1)*bs)``) is dead *forever* once
+        ``(bi + 1) * bs <= ctx_len - window + 1``. Freed entries become
+        ``-1`` holes — the list keeps its length so ``len(blocks) * bs``
+        capacity math and ``t // bs`` table indexing stay valid, and the
+        device block table passes the holes through (reads mask
+        ``blk < 0``, writes drop). Returns the number freed and bumps
+        ``blocks_freed_window`` / the obs counter."""
+        if window <= 0:
+            return 0
+        dead_until = ctx_len - window + 1          # first live position
+        freed = []
+        for bi, b in enumerate(blocks):
+            if (bi + 1) * block_size > dead_until:
+                break                              # dead prefix is over
+            if b >= 0:
+                freed.append(b)
+                blocks[bi] = -1
+        if freed:
+            self.free(freed)
+            self.blocks_freed_window += len(freed)
+            self._m_window.inc(len(freed))
+        return len(freed)
+
     def copy_on_write(self, block: int) -> Optional[int]:
         """Before writing a shared block: returns a fresh private block to
         copy into (caller copies pool data), or ``block`` itself when it is
@@ -169,6 +223,17 @@ def supports(cfg: ModelConfig) -> bool:
     """The paged runtime covers pure-attention stacks (mamba state is not
     paged; those archs keep the dense ``serve.engine`` path)."""
     return all(s.mixer in ("attn", "attn_local") for s in cfg.blocks)
+
+
+def serving_window(cfg: ModelConfig) -> int:
+    """Pool-eviction window for a serving config: the scheduler may free
+    out-of-window blocks (``BlockAllocator.free_window``) only when EVERY
+    attention layer is sliding-window — one global layer pins the whole
+    context, so mixed stacks return 0 (no eviction, full-context pool)."""
+    if cfg.window > 0 and all(s.mixer == "attn_local"
+                              for s in cfg.blocks):
+        return cfg.window
+    return 0
 
 
 def init_paged_cache(cfg: ModelConfig, pc: PagedConfig) -> dict:

@@ -9,18 +9,24 @@ prompt batches are padded up to power-of-two buckets, which keeps the
 folded-CUR weight matmuls on the ``cur_matmul`` pad-and-slice fast path
 (MXU-aligned block sizes regardless of admitted batch raggedness).
 
-Decode attention runs in **rank space** (CURing's approximate-via-
-selected-columns framing; Sengupta et al. 2025): the key link matrix is
-folded into the query (``q̃ = scale * q @ Ukᵀ``) so scores are taken
-directly against the stored r-dim keys, and the value link matrix is
-applied after the softmax (``o = (p @ v_r) @ Uv``) — the CUR-compressed
-cache is never re-expanded to full head_dim on any backend. Behind
-``REPRO_PAGED_KERNEL`` (auto = TPU) the per-step attention dispatches to
-the ``kernels.paged_attention`` Pallas kernel, which reads pool blocks
-through the block table in-kernel — no ``gather_kv`` materialization at
-all; the XLA fallback keeps the gather but the same rank-space algebra.
-Both paths are scan-safe (no host syncs), so ``paged_decode_scan``
-multi-step windows work with the kernel gated either way.
+Attention — prefill AND decode — runs in **rank space** (CURing's
+approximate-via-selected-columns framing; Sengupta et al. 2025): the key
+link matrix is folded into the query (``q̃ = scale * q @ Ukᵀ``) so scores
+are taken directly against the r-dim compressed keys, and the value link
+matrix is applied after the softmax (``o = (p @ v_r) @ Uv``) — the
+CUR-compressed cache is never re-expanded to full head_dim on any
+backend. Every attention call here resolves through the backend registry
+(``repro.attention``): decode through the ``paged_decode`` variant
+(Pallas block-table kernel behind ``REPRO_PAGED_KERNEL``, else the
+gather-based XLA reference), prompt attention through ``paged_prefill``
+(``rank_fold`` by default: attend at feature dim r and scatter the same
+compressed blocks to the pool in one pass — no full-head-dim KV bytes,
+no reconstruct-then-recompress double write, and no last-position splice
+because every prompt position already attends the compressed K/V decode
+will read; ``REPRO_PREFILL_BACKEND=reconstruct`` keeps the full-head-dim
+oracle for calibration/tests). Both decode paths are scan-safe (no host
+syncs), so ``paged_decode_scan`` multi-step windows work with the kernel
+gated either way.
 """
 from __future__ import annotations
 
@@ -29,10 +35,12 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.attention import registry as attn_registry
+from repro.attention.prefill import (               # noqa: F401 (re-export)
+    reconstructed_bytes_per_prefill)
+from repro.attention.registry import (              # noqa: F401 (re-export)
+    fold_q, resolve_paged, resolve_prefill, unfold_o, use_paged_kernel)
 from repro.configs.base import ATTN, ATTN_LOCAL, MLP, MOE, ModelConfig
-from repro.kernels.paged_attention import (
-    fold_q, paged_attention_op, paged_attention_ref, unfold_o,
-    use_paged_kernel)
 from repro.models import attention as attn
 from repro.models.layers import apply_w, norm
 from repro.models.mlp import mlp_forward
@@ -47,23 +55,19 @@ def _paged_attn(qg, k_pool, v_pool, table, ctx_len, uk, uv, scale,
 
     qg (B, K, G, hd) grouped queries; pools (n_blocks, bs, K, r).
     Returns (B, K, G, hd) — rank-space scores/values with the Uk/Uv
-    folds, on the Pallas block-table kernel when gated on, else the
-    gather-based XLA reference (same math, same masking). ``kernel``
-    pins the dispatch explicitly (the Server resolves the env gate ONCE
-    and threads it here, so a mid-session env flip cannot make a lazily
-    traced step disagree with its jit-cache key); None re-reads the env
-    at trace time. ``q_span = S > 1`` is the speculative-verify layout
-    (G = S * group, per-row positions ctx + row // group) — the pool
-    read is shared across all S positions on both dispatch paths."""
-    if kernel is None:
-        kernel = use_paged_kernel()
+    folds, resolved through the registry's ``paged_decode`` variant
+    (Pallas block-table kernel when gated on, else the gather-based XLA
+    reference — same math, same masking). ``kernel`` pins the dispatch
+    explicitly (the Server resolves the env gate ONCE and threads it
+    here, so a mid-session env flip cannot make a lazily traced step
+    disagree with its jit-cache key); None re-reads the env at trace
+    time. ``q_span = S > 1`` is the speculative-verify layout (G = S *
+    group, per-row positions ctx + row // group) — the pool read is
+    shared across all S positions on both dispatch paths."""
+    be = resolve_paged(kernel)
     qf = fold_q(qg, uk, scale)                    # (B, K, G, r)
-    if kernel:
-        o_r = paged_attention_op(qf, k_pool, v_pool, table, ctx_len,
-                                 window=window, q_span=q_span)
-    else:
-        o_r = paged_attention_ref(qf, k_pool, v_pool, table, ctx_len,
-                                  window=window, q_span=q_span)
+    o_r = be.fn(qf, k_pool, v_pool, table, ctx_len,
+                window=window, q_span=q_span)
     return unfold_o(o_r, uv)                      # (B, K, G, hd)
 
 
@@ -128,21 +132,25 @@ def _channel_mix(x, p, spec, cfg, mesh):
 def paged_prefill(params, cfg: ModelConfig, pc: pcache.PagedConfig,
                   tokens: jnp.ndarray, lengths: jnp.ndarray,
                   cache: dict, table: jnp.ndarray, mesh=None,
-                  kernel=None):
-    """Process padded ragged prompts, writing roped K/V into the pool.
+                  backend=None):
+    """Process padded ragged prompts, writing K/V into the pool.
 
     tokens (B, S) right-padded; lengths (B,) true prompt lengths (0 =
     inactive slot); table (B, maxb) block ids (-1 pad). Returns
     (last-real-token logits (B, V), new cache).
 
-    In CUR-KV mode the **last real position's** attention output is
-    recomputed through the pool (rank space — the Pallas kernel when
-    gated on, the XLA reference otherwise) and spliced in, so the token
-    sampled from the prefill logits sees exactly the compressed cache it
-    will be decoded against instead of the dense in-flight K/V. The
-    splice keys on ``cur_kv``, NOT on the kernel gate: the sampled
-    stream must not change between backends/gates, only the dispatch
-    may. Dense pools skip it (the splice is an algebraic no-op there)."""
+    CUR-KV pools resolve the registry's ``paged_prefill`` variant.
+    ``rank_fold`` (the default) compresses K/V to ``(B, S, K, r)`` once,
+    attends in rank space, and scatters those same compressed arrays to
+    the pool — one pass, zero full-head-dim KV bytes (see
+    ``reconstructed_bytes_per_prefill``), and no last-position splice:
+    every prompt position attends exactly the compressed cache decode
+    will read, so the sampled stream agrees with the pool by
+    construction. ``backend`` pins "fold"/"reconstruct" (the Server
+    resolves ``REPRO_PREFILL_BACKEND`` ONCE and threads it here, same
+    jit-cache-key contract as the decode ``kernel`` pin); None re-reads
+    the env at trace time. Dense pools bypass the variant: the raw K/V
+    IS the payload."""
     check_supported(cfg)
     x = _embed(params, cfg, {"tokens": tokens})
     B, S, _ = x.shape
@@ -150,31 +158,27 @@ def paged_prefill(params, cfg: ModelConfig, pc: pcache.PagedConfig,
                                  (B, S))
     scale = cfg.resolved_head_dim ** -0.5
     last = jnp.clip(lengths - 1, 0, S - 1)
+    be = resolve_prefill(backend)
     new_k, new_v = cache["k"], cache["v"]
     for li, spec, p in iter_blocks(params, cfg):
         win = cfg.window if spec.mixer == ATTN_LOCAL else 0
         h = norm(x, p.get("norm1"), cfg)
         q, k, v = attn.qkv_project(h, p, cfg, positions)
         qg = attn._group_q(q, cfg.n_kv_heads)
-        o = attn._mix(qg, k, v, positions, win, scale, cfg)
-        o = o.reshape(B, S, -1)
         qk, uk, qv, uv = _layer_proj(cache, li)
-        pool_k = pcache.write_prompt(
-            new_k[li], pcache.compress_kv(k, qk), table, lengths,
-            pc.block_size)
-        pool_v = pcache.write_prompt(
-            new_v[li], pcache.compress_kv(v, qv), table, lengths,
-            pc.block_size)
+        if qk is None:                            # dense pool
+            o = attn._mix(qg, k, v, positions, win, scale, cfg)
+            kc, vc = k, v
+        else:                                     # CUR-KV pool
+            o, kc, vc = be.fn(qg, k, v, positions, win, scale, cfg,
+                              (qk, uk, qv, uv))
+        o = o.reshape(B, S, -1)
+        pool_k = pcache.write_prompt(new_k[li], kc, table, lengths,
+                                     pc.block_size)
+        pool_v = pcache.write_prompt(new_v[li], vc, table, lengths,
+                                     pc.block_size)
         new_k = new_k.at[li].set(pool_k)
         new_v = new_v.at[li].set(pool_v)
-        if qk is not None:                        # CUR-KV pool
-            qg_last = jnp.take_along_axis(
-                qg, last[:, None, None, None, None], axis=1)[:, 0]
-            o_last = _paged_attn(qg_last, pool_k, pool_v, table, last,
-                                 uk, uv, scale, win,
-                                 kernel).reshape(B, 1, -1)
-            sel = (positions == last[:, None])[..., None]   # (B, S, 1)
-            o = jnp.where(sel, o_last, o)
         x = x + apply_w(o, p["wo"])
         x = _channel_mix(x, p, spec, cfg, mesh)
     x = norm(x, params.get("final_norm"), cfg)

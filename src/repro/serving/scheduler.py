@@ -15,6 +15,16 @@ full. When the block pool runs dry mid-decode, the most-recently-admitted
 victim is preempted by eviction — all its blocks are freed and it rejoins
 the *front* of the queue carrying its generated tokens, so re-admission
 re-prefills prompt+generated and decoding continues bit-exactly.
+
+Sliding-window serving (``window > 0``, fully-local stacks only — see
+``paged_cache.serving_window``): blocks wholly behind the window are
+freed as decode advances (the window mask is monotone in ``ctx_len``, so
+a dead block is dead forever) and admission skips the dead prefix of
+long prompts outright. Freed/skipped entries stay in ``Slot.blocks`` as
+``-1`` holes — the list keeps one entry per block *index* so capacity
+math and ``t // bs`` table lookups are unchanged, while live pool
+occupancy per slot is O(window) instead of O(ctx_len). The device side
+already treats holes as dead: reads mask ``blk < 0``, writes drop.
 """
 from __future__ import annotations
 
@@ -78,9 +88,10 @@ class Plan:
 
 class Scheduler:
     def __init__(self, pc: PagedConfig, max_concurrency: int, obs=None,
-                 tracer=None):
+                 tracer=None, window: int = 0):
         self.pc = pc
         self.max_concurrency = max_concurrency
+        self.window = window          # 0 = no eviction (full context)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Slot]] = [None] * max_concurrency
         self.alloc = BlockAllocator(pc.n_blocks, obs=obs)
@@ -133,13 +144,21 @@ class Scheduler:
             n_pre = self._prefill_len(req)
             # +1 headroom so the first decode write always has a slot
             need = self.pc.blocks_for(n_pre + 1)
-            blocks = self.alloc.alloc(need)
+            # window mode: the prompt's dead prefix never needs pool
+            # blocks — its write_prompt scatters drop on the -1 holes and
+            # decode can never attend it (prefill attention itself runs
+            # on in-flight K/V, not the pool)
+            first_live = 0
+            if self.window > 0:
+                first_live = max(0, n_pre - self.window + 1) \
+                    // self.pc.block_size
+            blocks = self.alloc.alloc(need - first_live)
             if blocks is None:
                 break
             self.queue.popleft()
             slot_id = free_slots.pop(0)
             self.slots[slot_id] = Slot(
-                req=req, blocks=blocks, ctx_len=n_pre,
+                req=req, blocks=[-1] * first_live + blocks, ctx_len=n_pre,
                 next_token=(req.out_tokens[-1] if req.out_tokens else -1),
                 admit_seq=self._admit_seq)
             self._admit_seq += 1
@@ -147,6 +166,20 @@ class Scheduler:
         return admitted
 
     # -- decode capacity / preemption ----------------------------------
+    def evict_out_of_window(self) -> int:
+        """Free every active slot's blocks that fell wholly behind the
+        sliding window (no-op when ``window == 0``). Returns blocks
+        freed; called each step before growing block lists so decode pool
+        occupancy stays O(window) per slot."""
+        if self.window <= 0:
+            return 0
+        n = 0
+        for i in self.active_slots:
+            slot = self.slots[i]
+            n += self.alloc.free_window(slot.blocks, slot.ctx_len,
+                                        self.window, self.pc.block_size)
+        return n
+
     def ensure_decode_blocks(self, lookahead: int = 1,
                              per_slot=None) -> None:
         """Every active slot is about to write tokens
@@ -154,6 +187,7 @@ class Scheduler:
         the window per slot id, e.g. trimmed to a request's remaining
         budget); grow its block list to cover them. On pool exhaustion,
         evict the newest-admitted other slot and retry."""
+        self.evict_out_of_window()
         for i in sorted(self.active_slots,
                         key=lambda j: self.slots[j].admit_seq):
             slot = self.slots[i]
@@ -180,9 +214,14 @@ class Scheduler:
             return None
         return max(cands, key=lambda i: self.slots[i].admit_seq)
 
+    @staticmethod
+    def _live(blocks: List[int]) -> List[int]:
+        """Allocator-facing view of a block list: window holes excluded."""
+        return [b for b in blocks if b >= 0]
+
     def _preempt(self, slot_id: int) -> None:
         slot = self.slots[slot_id]
-        self.alloc.free(slot.blocks)
+        self.alloc.free(self._live(slot.blocks))
         self.slots[slot_id] = None
         slot.req.n_preempted += 1
         self.n_preemptions += 1
@@ -215,13 +254,17 @@ class Scheduler:
 
         def rollback() -> None:
             for blocks in forked:
-                self.alloc.free(blocks)
+                self.alloc.free(self._live(blocks))
 
         for i in self.active_slots:
             slot = self.slots[i]
             c = slot.ctx_len
             last = min(c + k, self.pc.max_len - 1)
-            spec = self.alloc.fork(slot.blocks)
+            # window holes are shared verbatim (-1 stays -1; there is no
+            # block to fork) — the write range below is always live, so
+            # holes never need CoW
+            self.alloc.fork(self._live(slot.blocks))
+            spec = list(slot.blocks)
             forked.append(spec)
             for bi in range(c // bs, min(last // bs, len(spec) - 1) + 1):
                 old = spec[bi]
@@ -257,19 +300,19 @@ class Scheduler:
                    slot.ctx_len // self.pc.block_size + 1)
         slot.blocks = spec_blocks[:keep]
         if spec_blocks[keep:]:
-            self.alloc.free(spec_blocks[keep:])
-        self.alloc.free(old)
+            self.alloc.free(self._live(spec_blocks[keep:]))
+        self.alloc.free(self._live(old))
 
     def abort_spec(self, fork: SpecFork) -> None:
         """Roll a fork back (e.g. after a failed device step): drop every
         forked reference; parents are untouched."""
         for blocks in fork.tables.values():
-            self.alloc.free(blocks)
+            self.alloc.free(self._live(blocks))
 
     # -- retirement ----------------------------------------------------
     def retire(self, slot_id: int) -> Request:
         slot = self.slots[slot_id]
-        self.alloc.free(slot.blocks)
+        self.alloc.free(self._live(slot.blocks))
         self.slots[slot_id] = None
         return slot.req
 

@@ -40,12 +40,13 @@ def _bucket(n: int, lo: int, hi: int) -> int:
     return min(b, hi)
 
 
-# jit cache keyed by (cfg, pc, mesh, paged-kernel gate): Server instances
-# with the same model/pool layout share compiled step functions, so a
-# fresh Server (benchmark reruns, worker restarts) never recompiles. The
-# REPRO_PAGED_KERNEL gate resolves at trace time inside the step bodies,
-# so its resolved value is part of the key — flipping the env var between
-# Server constructions compiles fresh steps instead of reusing stale ones.
+# jit cache keyed by (cfg, pc, mesh, paged-kernel gate, prefill backend):
+# Server instances with the same model/pool layout share compiled step
+# functions, so a fresh Server (benchmark reruns, worker restarts) never
+# recompiles. The REPRO_PAGED_KERNEL / REPRO_PREFILL_BACKEND gates
+# resolve at trace time inside the step bodies, so their resolved values
+# are part of the key — flipping an env var between Server constructions
+# compiles fresh steps instead of reusing stale ones.
 # LRU-bounded: each entry pins compiled executables (and their weight-
 # sized constants) for the process lifetime, and spec-decode servers add
 # a second entry per (draft, target, k) combination — sweeping k in a
@@ -91,7 +92,8 @@ def _jitted_steps(cfg: ModelConfig, pc, mesh):
     # disagree with the key if the var flips between construction and
     # first request
     kern = runtime.use_paged_kernel()
-    key = (cfg, pc, None if mesh is None else id(mesh), kern)
+    pb = runtime.resolve_prefill().name
+    key = (cfg, pc, None if mesh is None else id(mesh), kern, pb)
     if key in _JIT_CACHE:
         _JIT_CACHE.move_to_end(key)
         _jit_count("hits")
@@ -99,7 +101,7 @@ def _jitted_steps(cfg: ModelConfig, pc, mesh):
         def _prefill(params, tokens, lengths, cache, table):
             return runtime.paged_prefill(params, cfg, pc, tokens,
                                          lengths, cache, table, mesh,
-                                         kernel=kern)
+                                         backend=pb)
 
         def _decode(params, tokens, cache, table, ctx, active):
             return runtime.paged_decode(params, cfg, pc, tokens, cache,
@@ -201,8 +203,19 @@ class Server:
         # pass one in to aggregate across servers or export centrally
         self.obs = obs if obs is not None else Registry(enabled=True)
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # sliding-window serving: out-of-window pool blocks are freed as
+        # decode advances, but ONLY when every attending model is fully
+        # local — a global-attention layer (in the target or, under
+        # speculation, the draft: they share one block table) pins the
+        # whole context. Both local -> the larger window wins (blocks the
+        # other model still reads must stay live).
+        window = pcache.serving_window(cfg)
+        if draft_params is not None and spec_k:
+            dw = pcache.serving_window(draft_cfg or cfg)
+            window = max(window, dw) if (window and dw) else 0
+        self.window = window
         self.scheduler = Scheduler(self.pc, max_concurrency, obs=self.obs,
-                                   tracer=self.tracer)
+                                   tracer=self.tracer, window=window)
         self.cache = pcache.init_paged_cache(cfg, self.pc)
         if calib_tokens is None:
             calib_tokens = jax.random.randint(
@@ -215,6 +228,7 @@ class Server:
         # resolved once, alongside the jit key: stats must describe the
         # path THIS server compiled, not the env var's current value
         self._paged_kernel = runtime.use_paged_kernel()
+        self._prefill_backend = runtime.resolve_prefill().name
         self._prefill, self._decode, self._decode_scan = _jitted_steps(
             cfg, self.pc, mesh)
         self.max_decode_window = max_decode_window
@@ -665,6 +679,10 @@ class Server:
 
     def _run_decode(self, now: float) -> None:
         sched = self.scheduler
+        # drop out-of-window blocks BEFORE forking/reserving: the spec
+        # fork path never calls ensure_decode_blocks, and freed blocks
+        # raise the odds the fork finds a pool slot
+        sched.evict_out_of_window()
         if self.spec_k and self._run_spec_decode():
             return
         k = self._decode_window()
@@ -834,6 +852,23 @@ class Server:
             "gathered_bytes_per_step": runtime.gathered_bytes_per_step(
                 self.cfg, self.pc, self.scheduler.max_concurrency,
                 kernel=self._paged_kernel),
+            # registry-resolved attention backends this server compiled
+            # against (part of the jit-cache key)
+            "attn_backends": {
+                "paged_decode": ("paged_pallas" if self._paged_kernel
+                                 else "paged_xla"),
+                "paged_prefill": self._prefill_backend,
+            },
+            "prefill_backend": self._prefill_backend,
+            # full-head-dim KV bytes a worst-case (max_len-bucket) CUR-KV
+            # prefill materializes — 0 on the rank_fold path
+            "reconstructed_bytes_per_prefill":
+                runtime.reconstructed_bytes_per_prefill(
+                    self.cfg, self.pc, self.scheduler.max_concurrency,
+                    self.pc.max_len, backend=self._prefill_backend),
+            "window": self.window,
+            "window_blocks_freed":
+                self.scheduler.alloc.blocks_freed_window,
             "spec_k": self.spec_k,
             "n_spec_windows": int(
                 val("repro_serving_spec_windows_total")),

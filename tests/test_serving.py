@@ -179,9 +179,10 @@ def test_cur_kv_full_rank_exact(olmo, prompts):
 
 def test_cur_kv_compressed_bytes_and_finite(olmo, prompts):
     """r == head_dim // 2: half the cache bytes; decode stays finite.
-    The first token is sampled against the *compressed* pool (the
-    prefill last-position splice — consistent with every decode step
-    that follows), so it may legitimately differ from the dense run."""
+    Prompt attention runs in rank space (the rank_fold prefill backend),
+    so every position — the first sampled token included — sees the same
+    compressed KV decode reads, and may legitimately differ from the
+    dense run."""
     cfg, params = olmo
     hd = cfg.resolved_head_dim
     dense = PagedConfig(block_size=8, n_blocks=64, max_blocks_per_seq=8)
@@ -240,7 +241,8 @@ def test_decode_scan_kernel_on_off_identical(olmo, prompts, monkeypatch,
     emits identical tokens with the paged Pallas kernel forced on
     (interpret mode on CPU) and forced off (rank-space XLA path) — for
     dense AND CUR-KV pools: the gate may only change dispatch, never the
-    sampled stream (the prefill splice keys on cur_kv, not the gate)."""
+    sampled stream (the rank-fold prefill keys on cur_kv, not the
+    gate)."""
     cfg, params = olmo
     kw = dict(cur_kv=True, kv_rank=cfg.resolved_head_dim // 2) \
         if cur_kv else {}
@@ -356,3 +358,73 @@ def test_generate_without_eos_unchanged(olmo, prompts):
     out = generate(params, cfg, p, 6)
     assert out.tokens.shape == (1, 6)
     assert np.isfinite(np.asarray(out.logprobs)).all()
+
+
+# ---------------------------------------------------------------------------
+# prefill backend (rank_fold vs reconstruct) and sliding-window eviction
+# ---------------------------------------------------------------------------
+
+def test_prefill_backend_fold_vs_reconstruct_identity(olmo, prompts,
+                                                      monkeypatch):
+    """End-to-end greedy decode with the rank-space prefill on (rank_fold)
+    vs off (reconstruct oracle): identical token streams, and only the
+    oracle materializes full-head-dim KV during prefill."""
+    cfg, params = olmo
+    hd = cfg.resolved_head_dim
+    pc = PagedConfig(block_size=8, n_blocks=64, max_blocks_per_seq=8,
+                     cur_kv=True, kv_rank=hd // 2)
+    monkeypatch.setenv("REPRO_PREFILL_BACKEND", "reconstruct")
+    ref, s0 = _run(params, cfg, pc, prompts)
+    monkeypatch.setenv("REPRO_PREFILL_BACKEND", "fold")
+    out, s1 = _run(params, cfg, pc, prompts)
+    assert out == ref
+    st0, st1 = s0.stats(), s1.stats()
+    assert st0["prefill_backend"] == "reconstruct"
+    assert st1["prefill_backend"] == "rank_fold"
+    assert st1["attn_backends"]["paged_prefill"] == "rank_fold"
+    # acceptance: the fold path materializes ZERO full-head-dim KV
+    assert st1["reconstructed_bytes_per_prefill"] == 0
+    assert st0["reconstructed_bytes_per_prefill"] > 0
+
+
+def _all_local_cfg():
+    """gemma3 smoke with every layer sliding-window (the mixed stack's
+    single global layer pins the whole context, window=0 for serving)."""
+    from repro.configs.base import ATTN_LOCAL, MLP, BlockSpec
+    cfg = get_smoke("gemma3-1b")
+    loc = BlockSpec(ATTN_LOCAL, MLP)
+    return cfg.replace(name="gemma3-smoke-all-local",
+                       groups=(((loc,) * cfg.n_layers, 1),))
+
+
+def test_serving_window_requires_fully_local_stack():
+    mixed = get_smoke("gemma3-1b")
+    assert pcache.serving_window(mixed) == 0        # one global layer
+    local = _all_local_cfg()
+    assert pcache.serving_window(local) == local.window > 0
+
+
+def test_window_eviction_pool_drain(prompts, monkeypatch):
+    """Sliding-window serving under scheduler churn: out-of-window blocks
+    are freed as decode advances, occupancy returns to zero on drain, and
+    tokens are identical to the no-eviction run (the window mask already
+    kills evicted positions — eviction only reclaims dead pool space)."""
+    cfg = _all_local_cfg()
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    pc = PagedConfig(block_size=4, n_blocks=32, max_blocks_per_seq=8)
+    out, srv = _run(params, cfg, pc, prompts, n_new=12, C=2)
+    assert srv.window == cfg.window
+    alloc = srv.scheduler.alloc
+    assert alloc.blocks_freed_window > 0
+    # pool-drain invariant: every block (evicted or retired) came back
+    alloc.assert_used(exactly=0)
+    assert alloc.n_free == pc.n_blocks
+    st = srv.stats()
+    assert st["window"] == cfg.window
+    assert st["window_blocks_freed"] == alloc.blocks_freed_window
+    # eviction must not change a single sampled token
+    monkeypatch.setattr(pcache, "serving_window", lambda _cfg: 0)
+    ref, srv0 = _run(params, cfg, pc, prompts, n_new=12, C=2)
+    assert srv0.window == 0
+    assert srv0.scheduler.alloc.blocks_freed_window == 0
+    assert out == ref
