@@ -1,0 +1,305 @@
+"""Fleet-tier saturation sweep: offered load vs SLO attainment.
+
+Answers the capacity question the fixed-workload serving bench cannot:
+**what QPS can each serving config sustain at a TTFT+TPOT SLO?** The
+sweep ramps a seeded Poisson offered rate (with a shared-prefix mix)
+through the same ``Server`` the production CLI drives — open-loop, so
+arrival lateness is queue wait, never flattery — and reports per-rate
+rows (attainment, goodput, TTFT/TPOT p50/p99, queue-wait p99) plus a
+max-sustainable-QPS estimate at the SLO knee for each config:
+
+  dense     paged pool, full-rank KV (the baseline capacity)
+  cur-kv    CUR-compressed KV at half head_dim rank (0.5x cache bytes —
+            does compression buy sustainable QPS or cost latency?)
+  spec      speculative decoding (early-exit self-draft, k=4) — the
+            CoW-fork path under load
+
+The SLO is anchored at the dense config's *unloaded* latency (targets =
+small multiples of its p50s at the lowest rate), so the sweep is
+machine-speed invariant: a slower CI box shifts the anchor and the
+offered rates together. Offered-rate fractions are of the dense
+config's measured burst capacity; every config serves byte-identical
+request streams at each rate (same workload seed).
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet --quick \
+        [--out fleet.json] [--csv sweep.csv]
+"""
+import argparse
+import csv
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.obs import loadgen
+from repro.obs.slo import SLOSpec, decompose_stats, evaluate
+from repro.serving import PagedConfig, Server
+
+ARCH = "olmo-1b"
+ATTAINMENT = 0.9              # the promised SLO fraction
+# offered rates as fractions of measured burst capacity; the top of the
+# ramp deliberately overshoots sustainable throughput so the attainment
+# knee is inside the sweep, not past its edge
+RATE_FRACTIONS = (0.4, 0.8, 1.2, 1.6, 2.4, 3.2)
+PROMPT_LENS = (8, 12, 16, 24, 32, 40)
+GEN_LENS = (8, 12, 16, 24)
+
+
+def _workload_spec(n: int, rate: float, vocab: int,
+                   seed: int) -> loadgen.WorkloadSpec:
+    return loadgen.WorkloadSpec(
+        n_requests=n, rate_qps=rate, arrival="poisson",
+        prompt=loadgen.LengthDist(kind="choice", values=PROMPT_LENS),
+        gen=loadgen.LengthDist(kind="choice", values=GEN_LENS),
+        vocab_size=vocab, shared_prefix_fraction=0.25, prefix_len=16,
+        seed=seed)
+
+
+def _shape_coverage_wl(vocab: int) -> list:
+    """One burst request per prompt-length bucket at the max gen budget:
+    a warm workload guaranteeing every prefill shape and (via the
+    retirement ramp) every decode batch size compiles before timing."""
+    rng = np.random.default_rng(0)
+    return [{"prompt": rng.integers(0, vocab, p).tolist(),
+             "max_new_tokens": max(GEN_LENS), "arrival_offset_s": 0.0,
+             "prefix_id": -1} for p in PROMPT_LENS]
+
+
+def _serve(make_server, workload):
+    """Fresh server per run (cold queues, shared jit cache) -> per-run
+    row of driver + server measurements."""
+    srv = make_server()
+    rep = loadgen.drive(srv, workload)
+    st = srv.stats()
+    return srv, rep, st
+
+
+def _rate_row(spec_w, srv, rep, st, slo: SLOSpec) -> dict:
+    ev = evaluate(srv.finished.values(), slo, rep.duration_s)
+    dec = decompose_stats(st)
+    return {
+        "offered_qps": spec_w.rate_qps,
+        "achieved_qps": (ev.n_requests / rep.duration_s
+                         if rep.duration_s > 0 else 0.0),
+        "completed": ev.n_requests,
+        "elapsed_s": rep.duration_s,
+        "n_late": rep.n_late,
+        "max_late_s": rep.max_late_s,
+        "attainment": ev.attainment,
+        "slo_met": ev.met,
+        "goodput_tok_s": ev.goodput_tok_s,
+        "throughput_tok_s": ev.throughput_tok_s,
+        "ttft_p50_s": ev.ttft_p50_s,
+        "ttft_p99_s": ev.ttft_p99_s,
+        "tpot_p50_s": ev.tpot_p50_s,
+        "tpot_p99_s": ev.tpot_p99_s,
+        "queue_wait_p50_s": st["queue_wait_p50_s"],
+        "queue_wait_p99_s": st["queue_wait_p99_s"],
+        "queue_wait_frac": dec["queue_wait_frac"],
+        "n_preemptions": st["n_preemptions"],
+    }
+
+
+def _knee(rows, attainment: float) -> dict:
+    """Max sustainable QPS at the SLO knee: scan the ramp in offered-rate
+    order and stop at the *first* rate whose attainment drops below the
+    target, linearly interpolating the crossing from the last passing
+    rate. First-failure semantics keep a noisy pass above a real failure
+    from inflating the answer. All-pass sweeps report the top rate as a
+    lower bound (``saturated`` False); a ramp that never passes reports
+    0 (the config can't hold the SLO even unloaded)."""
+    rows = sorted(rows, key=lambda r: r["offered_qps"])
+    prev = None
+    for r in rows:
+        if r["attainment"] >= attainment:
+            prev = r
+            continue
+        if prev is None:
+            return {"max_sustainable_qps": 0.0, "saturated": True,
+                    "interpolated": False}
+        # attainment falls from prev -> r; find the crossing
+        da = prev["attainment"] - r["attainment"]
+        frac = ((prev["attainment"] - attainment) / da) \
+            if da > 1e-9 else 0.0
+        q = prev["offered_qps"] + frac * (r["offered_qps"]
+                                          - prev["offered_qps"])
+        return {"max_sustainable_qps": q, "saturated": True,
+                "interpolated": True}
+    return {"max_sustainable_qps": prev["offered_qps"],
+            "saturated": False, "interpolated": False}
+
+
+def _bench(quick: bool = True):
+    cfg = get_smoke(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    C = 4
+    n_req = 32 if quick else 64
+    n_cal = 16 if quick else 32
+    hd = cfg.resolved_head_dim
+    max_len = max(PROMPT_LENS) + max(GEN_LENS)   # dist hard bound
+    pc_dense = PagedConfig.sized_for(max_len, C)
+    pc_curkv = PagedConfig.sized_for(max_len, C, cur_kv=True,
+                                     kv_rank=max(1, hd // 2))
+    spec_k = 4
+    # fork headroom: each slot transiently holds parent + CoW/extension
+    # blocks for the k+1 speculative window
+    pc_spec = dataclasses.replace(
+        pc_dense, n_blocks=pc_dense.n_blocks
+        + C * (pc_dense.blocks_for(spec_k) + 2))
+    from repro.serving.speculative import early_exit_draft
+    dparams, dcfg = early_exit_draft(params, cfg,
+                                     max(1, cfg.n_layers // 2))
+
+    configs = {
+        "dense": lambda: Server(params, cfg, pc_dense,
+                                max_concurrency=C),
+        "cur-kv": lambda: Server(params, cfg, pc_curkv,
+                                 max_concurrency=C),
+        "spec": lambda: Server(params, cfg, pc_spec, max_concurrency=C,
+                               draft_params=dparams, draft_cfg=dcfg,
+                               spec_k=spec_k),
+    }
+
+    shape_wl = _shape_coverage_wl(cfg.vocab_size)
+
+    def warm(make):
+        # per-config, immediately before its timed runs: the engine's
+        # jit cache is a small LRU, so a single global warm pass gets
+        # evicted by the other configs' compilations
+        _serve(make, shape_wl)
+        _serve(make, cal_wl)
+
+    # -- capacity calibration (dense, burst arrivals, median-of-3) -----
+    cal_spec = _workload_spec(n_cal, 0.0, cfg.vocab_size, seed=99)
+    cal_spec = dataclasses.replace(cal_spec, arrival="burst")
+    cal_wl = loadgen.generate(cal_spec)
+    warm(configs["dense"])
+    cal_qps = []
+    for _ in range(3):
+        _, rep, _st = _serve(configs["dense"], cal_wl)
+        cal_qps.append(rep.offered / rep.duration_s)
+    cal_qps.sort()
+    capacity_qps = cal_qps[1]
+    # median-of-3 spread: the measured noise floor on this machine; the
+    # regression gate (benchmarks/compare.py) widens its tolerance by it
+    rel_spread = ((cal_qps[2] - cal_qps[0]) / capacity_qps
+                  if capacity_qps > 0 else 0.0)
+
+    # -- SLO anchored at unloaded dense latency -------------------------
+    anchor_spec = _workload_spec(n_cal, max(0.5, 0.2 * capacity_qps),
+                                 cfg.vocab_size, seed=98)
+    _, a_rep, a_st = _serve(configs["dense"], loadgen.generate(anchor_spec))
+    slo = SLOSpec(
+        ttft_s=max(5.0 * a_st["ttft_p50_s"], 0.05),
+        tpot_s=max(3.0 * a_st["tpot_p50_s"], 0.005),
+        attainment=ATTAINMENT)
+
+    # -- the sweep ------------------------------------------------------
+    rates = [f * capacity_qps for f in RATE_FRACTIONS]
+    results = {
+        "arch": ARCH, "concurrency": C, "n_requests": n_req,
+        "capacity_qps": capacity_qps,
+        "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s,
+                "attainment": ATTAINMENT},
+        "rate_fractions": list(RATE_FRACTIONS),
+        "noise": {"capacity_qps_runs": cal_qps,
+                  "rel_spread": rel_spread},
+        "configs": {},
+    }
+    rows = []
+    for name, make in configs.items():
+        warm(make)
+        crows = []
+        for ri, rate in enumerate(rates):
+            wspec = _workload_spec(n_req, rate, cfg.vocab_size, seed=ri)
+            srv, rep, st = _serve(make, loadgen.generate(wspec))
+            row = _rate_row(wspec, srv, rep, st, slo)
+            crows.append(row)
+        # transient-stall retry: a rate failing *below* a passing higher
+        # rate is a host hiccup, not saturation (attainment is monotone
+        # non-increasing in offered load, up to noise). One targeted
+        # re-run of the identical workload; keep the better attainment.
+        for ri in range(len(crows)):
+            if (crows[ri]["attainment"] < ATTAINMENT
+                    and any(r["attainment"] >= ATTAINMENT
+                            for r in crows[ri + 1:])):
+                wspec = _workload_spec(n_req, rates[ri],
+                                       cfg.vocab_size, seed=ri)
+                srv, rep, st = _serve(make, loadgen.generate(wspec))
+                retry = _rate_row(wspec, srv, rep, st, slo)
+                if retry["attainment"] > crows[ri]["attainment"]:
+                    retry["retried"] = True
+                    crows[ri] = retry
+        for ri, row in enumerate(crows):
+            frac = RATE_FRACTIONS[ri]
+            rows.append((
+                f"fleet/{name}@{frac:g}x",
+                1e6 / max(row["achieved_qps"], 1e-9),
+                f"att={row['attainment']:.2f} "
+                f"goodput={row['goodput_tok_s']:.0f}tok/s "
+                f"ttft_p99={row['ttft_p99_s']*1e3:.0f}ms"))
+        knee = _knee(crows, ATTAINMENT)
+        results["configs"][name] = {"rows": crows, **knee}
+        rows.append((f"fleet/{name}/max_sustainable_qps", 0.0,
+                     f"{knee['max_sustainable_qps']:.1f}qps "
+                     f"saturated={knee['saturated']}"))
+    return rows, results
+
+
+def run(quick: bool = True):
+    """benchmarks.run driver entry: rows only."""
+    return _bench(quick)[0]
+
+
+def run_results(quick: bool = True):
+    """benchmarks.run --out entry: (rows, results) for BENCH_fleet.json."""
+    return _bench(quick)
+
+
+def write_sweep_csv(results: dict, path: str) -> str:
+    """Flat per-rate CSV of the sweep (the CI artifact next to the
+    envelope)."""
+    fields = ["config", "offered_qps", "achieved_qps", "attainment",
+              "slo_met", "goodput_tok_s", "throughput_tok_s",
+              "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+              "queue_wait_p99_s", "queue_wait_frac", "completed",
+              "n_late", "n_preemptions"]
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields, extrasaction="ignore")
+        w.writeheader()
+        for name, c in results["configs"].items():
+            for row in c["rows"]:
+                w.writerow({"config": name, **row})
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--quick", action="store_true",
+                      help="small sweep sizes (the default; CI config)")
+    size.add_argument("--full", action="store_true",
+                      help="larger request counts + the same rate grid")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    ap.add_argument("--csv", default=None,
+                    help="write the per-rate sweep CSV here")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows, results = _bench(quick=not args.full)
+    print("name,us_per_call,derived")
+    emit(rows)
+    print(f"# bench_fleet done in {time.time()-t0:.1f}s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    if args.csv:
+        write_sweep_csv(results, args.csv)
+
+
+if __name__ == "__main__":
+    main()

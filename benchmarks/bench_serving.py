@@ -358,6 +358,16 @@ def _bench(quick: bool = True):
     results = {"arch": ARCH, "concurrency": C, "n_requests": n_req,
                "scenarios": []}
     results["scenarios"].append({"mix": "burst", "runs": burst})
+    # measured run-to-run noise on this machine (median-of-3 spread of
+    # the continuous engine): the regression gate (benchmarks/compare.py)
+    # widens its tolerances by it, so a wobbly baseline never gates at a
+    # tolerance tighter than its own reproducibility
+    cont3 = sorted(reps[r][1]["tokens_per_s"] for r in range(3))
+    results["noise"] = {
+        "metric": "continuous tokens_per_s (3 interleaved reps)",
+        "runs": cont3,
+        "rel_spread": ((cont3[2] - cont3[0]) / cont3[1]
+                       if cont3[1] else 0.0)}
 
     stag_wl = build_workload(n_req, cfg.vocab_size, spacing_s=0.01)
     stag = [run_continuous(params, cfg, stag_wl, C,

@@ -1,0 +1,241 @@
+"""Noise-aware perf-regression gate over checked-in bench envelopes.
+
+Diffs fresh ``BENCH_<module>.json`` envelopes against the checked-in
+baselines at the repo root. Raw timing numbers on shared CI runners are
+too noisy to gate on directly, so the comparison is structured:
+
+  - every gated metric carries a **direction** (higher- or
+    lower-is-better — only regressions in the bad direction count) and a
+    **relative tolerance**;
+  - the tolerance is widened by the **recorded noise** in the baseline
+    envelope (``results.noise.rel_spread``, the median-of-3 spread the
+    bench measured on the machine that produced it) — a baseline known
+    to wobble 20% run-to-run never gates at 10%;
+  - a **machine-variance guard**: if the *median* signed slowdown across
+    all timing-class metrics exceeds ``MACHINE_GUARD``, the fresh run is
+    on a slower machine (or a loaded one) — timing failures downgrade to
+    warnings, while machine-invariant ratio metrics (speedups, cache
+    ratios, accept rates) still gate.
+
+Warn-first by default: every verdict prints, exit code stays 0. CI wires
+it that way first; ``--strict`` (exit 1 on FAIL) is the flip once the
+tolerances have soaked.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline-dir . --fresh-dir fresh/ [--only bench_serving] \
+        [--strict] [--json gate.json]
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import List, Optional
+
+#: tolerance widening: effective tol = max(tol, NOISE_K * recorded spread)
+NOISE_K = 3.0
+#: median timing slowdown beyond which the machine, not the code, moved
+MACHINE_GUARD = 0.15
+
+HIGHER, LOWER = "higher", "lower"       # which direction is *better*
+TIMING, RATIO = "timing", "ratio"       # machine-speed sensitivity class
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    path: str          # dotted path into the envelope's ``results``
+    direction: str     # HIGHER / LOWER is better
+    rel_tol: float     # allowed relative regression before flagging
+    cls: str = TIMING  # TIMING joins the machine guard; RATIO never
+
+
+#: per-module gate: the envelope numbers that constitute the perf
+#: trajectory (benchmarks/README-worthy headline metrics, not every leaf)
+GATES = {
+    "bench_compression": [
+        MetricSpec("pipeline_median_s.batched_exact", LOWER, 0.35),
+        MetricSpec("pipeline_median_s.batched_randomized", LOWER, 0.35),
+        MetricSpec("speedup_loop_exact_vs_batched_randomized",
+                   HIGHER, 0.30, RATIO),
+    ],
+    "bench_plan": [
+        MetricSpec("planned.plan_s_median3", LOWER, 0.40),
+        MetricSpec("uniform.ppl", LOWER, 0.05, RATIO),
+        MetricSpec("planned.ppl", LOWER, 0.05, RATIO),
+        MetricSpec("ppl_gain", HIGHER, 0.30, RATIO),
+    ],
+    "bench_serving": [
+        MetricSpec("speedup_continuous_vs_static", HIGHER, 0.25, RATIO),
+        MetricSpec("curkv_cache_byte_ratio", LOWER, 0.05, RATIO),
+        MetricSpec("zoo_decode_tok_s", HIGHER, 0.30),
+        MetricSpec("decode_tok_s.continuous", HIGHER, 0.30),
+        MetricSpec("slo.burst.ttft_p99_s", LOWER, 0.15),
+        MetricSpec("slo.staggered-10ms.ttft_p99_s", LOWER, 0.15),
+        MetricSpec("long_prompt.prefill_speedup", HIGHER, 0.25, RATIO),
+        MetricSpec("speculative.speedup_vs_baseline",
+                   HIGHER, 0.25, RATIO),
+        MetricSpec("speculative.accept_rate", HIGHER, 0.05, RATIO),
+    ],
+    "bench_fleet": [
+        MetricSpec("capacity_qps", HIGHER, 0.30),
+        MetricSpec("configs.dense.max_sustainable_qps", HIGHER, 0.35),
+        MetricSpec("configs.cur-kv.max_sustainable_qps", HIGHER, 0.35),
+        MetricSpec("configs.spec.max_sustainable_qps", HIGHER, 0.35),
+        MetricSpec("configs.dense.rows.0.ttft_p50_s", LOWER, 0.50),
+        MetricSpec("configs.dense.rows.0.attainment",
+                   HIGHER, 0.15, RATIO),
+    ],
+}
+
+
+def get_path(obj, path: str):
+    """Dotted-path lookup; integer segments index lists. None if any
+    hop is missing."""
+    cur = obj
+    for seg in path.split("."):
+        if isinstance(cur, list):
+            try:
+                cur = cur[int(seg)]
+            except (ValueError, IndexError):
+                return None
+        elif isinstance(cur, dict):
+            if seg not in cur:
+                return None
+            cur = cur[seg]
+        else:
+            return None
+    return cur
+
+
+@dataclasses.dataclass
+class Verdict:
+    module: str
+    path: str
+    status: str              # PASS / WARN / FAIL / MISSING
+    baseline: Optional[float] = None
+    fresh: Optional[float] = None
+    regression: float = 0.0  # relative move in the bad direction (+)
+    tol: float = 0.0
+    note: str = ""
+
+    def row(self) -> str:
+        if self.baseline is None or self.fresh is None:
+            return (f"{self.status:7s} {self.module}:{self.path} "
+                    f"({self.note})")
+        return (f"{self.status:7s} {self.module}:{self.path} "
+                f"{self.baseline:.4g} -> {self.fresh:.4g} "
+                f"({self.regression:+.1%} vs tol {self.tol:.0%})"
+                f"{' ' + self.note if self.note else ''}")
+
+
+def _regression(spec: MetricSpec, base: float, fresh: float) -> float:
+    """Relative move in the *bad* direction (positive = worse)."""
+    if abs(base) < 1e-12:
+        return 0.0
+    d = (fresh - base) / abs(base)
+    return -d if spec.direction == HIGHER else d
+
+
+def compare_module(module: str, baseline_env: dict,
+                   fresh_env: dict) -> List[Verdict]:
+    """Gate one module's fresh envelope against its baseline."""
+    out: List[Verdict] = []
+    base_r = baseline_env.get("results", {})
+    fresh_r = fresh_env.get("results", {})
+    if baseline_env.get("quick") != fresh_env.get("quick"):
+        out.append(Verdict(module, "*", "MISSING",
+                           note="quick/full mismatch; not comparable"))
+        return out
+    spread = get_path(base_r, "noise.rel_spread") or 0.0
+
+    # first pass: raw verdicts
+    timing_slowdowns: List[float] = []
+    for spec in GATES.get(module, []):
+        b, f = get_path(base_r, spec.path), get_path(fresh_r, spec.path)
+        if not isinstance(b, (int, float)) or isinstance(b, bool) \
+                or not isinstance(f, (int, float)) or isinstance(f, bool):
+            out.append(Verdict(module, spec.path, "MISSING",
+                               note="metric absent on one side"))
+            continue
+        reg = _regression(spec, float(b), float(f))
+        tol = max(spec.rel_tol, NOISE_K * float(spread))
+        if spec.cls == TIMING:
+            timing_slowdowns.append(reg)
+        status = "FAIL" if reg > tol else "PASS"
+        note = (f"noise-widened tol ({spread:.1%} spread)"
+                if tol > spec.rel_tol and status == "FAIL" else "")
+        out.append(Verdict(module, spec.path, status, float(b), float(f),
+                           reg, tol, note))
+
+    # machine-variance guard: when the whole timing class moved together,
+    # the machine moved — downgrade timing FAILs, keep ratio FAILs
+    if timing_slowdowns:
+        timing_slowdowns.sort()
+        med = timing_slowdowns[len(timing_slowdowns) // 2]
+        if med > MACHINE_GUARD:
+            specs = {s.path: s for s in GATES.get(module, [])}
+            for v in out:
+                s = specs.get(v.path)
+                if (v.status == "FAIL" and s is not None
+                        and s.cls == TIMING):
+                    v.status = "WARN"
+                    v.note = (f"machine guard: median timing slowdown "
+                              f"{med:+.1%}")
+    return out
+
+
+def load_envelope(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def run_compare(baseline_dir: str, fresh_dir: str,
+                only: Optional[List[str]] = None) -> List[Verdict]:
+    verdicts: List[Verdict] = []
+    for module in (only or sorted(GATES)):
+        name = f"BENCH_{module.replace('bench_', '')}.json"
+        b = load_envelope(os.path.join(baseline_dir, name))
+        f = load_envelope(os.path.join(fresh_dir, name))
+        if b is None or f is None:
+            side = "baseline" if b is None else "fresh"
+            verdicts.append(Verdict(module, "*", "MISSING",
+                                    note=f"no {side} {name}"))
+            continue
+        verdicts.extend(compare_module(module, b, f))
+    return verdicts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory with checked-in BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory with freshly generated envelopes")
+    ap.add_argument("--only", action="append", default=None,
+                    help="gate only this module (repeatable)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on FAIL (default is warn-first: exit 0)")
+    ap.add_argument("--json", default=None,
+                    help="also write verdicts as JSON here")
+    args = ap.parse_args(argv)
+
+    verdicts = run_compare(args.baseline_dir, args.fresh_dir, args.only)
+    n = {"PASS": 0, "WARN": 0, "FAIL": 0, "MISSING": 0}
+    for v in verdicts:
+        n[v.status] += 1
+        print(v.row())
+    print(f"# compare: {n['PASS']} pass, {n['WARN']} warn, "
+          f"{n['FAIL']} fail, {n['MISSING']} missing"
+          + ("" if args.strict else " (warn-first: exit 0)"))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([dataclasses.asdict(v) for v in verdicts], f,
+                      indent=1)
+    return 1 if (args.strict and n["FAIL"]) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,8 +31,22 @@ MODULES = [
     "bench_kernels",              # kernel-level
     "bench_collectives",          # compressed vs dense psum payloads
     "bench_serving",              # continuous batching + speculative
+    "bench_fleet",                # offered-rate saturation sweep / SLO knee
     "bench_roofline",             # dry-run roofline table
 ]
+
+# Metric-namespace filter for the envelope's obs snapshot. A module's
+# *setup* may run other subsystems (bench_serving compresses a CUR
+# draft, recording repro_compress_* mid-module — a per-module registry
+# reset can't help), so each envelope keeps only the namespaces its
+# benchmark actually measures. None = keep everything (modules whose
+# instrumentation view is the whole process).
+OBS_PREFIXES = {
+    "bench_compression": ("repro_compress_",),
+    "bench_plan": ("repro_compress_", "repro_plan_"),
+    "bench_serving": ("repro_serving_",),
+    "bench_fleet": ("repro_serving_", "repro_slo_"),
+}
 
 # Envelope contract for the checked-in BENCH_*.json artifacts. Bump on
 # any backwards-incompatible change to the envelope itself; module
@@ -47,18 +61,25 @@ def write_envelope(out_dir: str, module: str, results, *,
     The envelope carries an ``obs`` snapshot of the process-wide metrics
     registry (empty unless the module's code paths recorded into it —
     e.g. compression shape-class timings), so the artifact preserves the
-    instrumentation view alongside the headline numbers. Additive field;
-    the envelope schema stays at version 1."""
+    instrumentation view alongside the headline numbers. Filtered to the
+    module's own metric namespaces (``OBS_PREFIXES``) so cross-subsystem
+    setup work doesn't bleed into the artifact. Additive field; the
+    envelope schema stays at version 1."""
     from repro.obs import metrics as obs_metrics
     name = module[len("bench_"):] if module.startswith("bench_") \
         else module
+    obs = obs_metrics.snapshot()
+    prefixes = OBS_PREFIXES.get(module)
+    if prefixes is not None:
+        obs = {k: v for k, v in obs.items()
+               if k.startswith(prefixes)}
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump({"schema_version": SCHEMA_VERSION,
                    "suite": "curing-repro-bench",
                    "module": module,
                    "quick": quick,
-                   "obs": obs_metrics.snapshot(),
+                   "obs": obs,
                    "results": results}, f, indent=1)
         f.write("\n")
     return path

@@ -32,13 +32,14 @@ import jax
 import numpy as np
 
 from repro import obs
+from repro.obs import loadgen, slo as slo_mod
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import CURConfig
 from repro.core import calibrate, compress_model
 from repro.data.tokens import DataConfig, SyntheticLM
 from repro.models import init_params
 from repro.serve.engine import generate
-from repro.serving import PagedConfig, SamplingParams, Server
+from repro.serving import PagedConfig, Server
 from repro.serving.paged_cache import supports as paged_supports
 
 
@@ -62,22 +63,11 @@ def make_workload(n_requests: int, vocab: int, *, max_new: int = 16,
 
 def run_continuous(server: Server, workload, *, temperature: float = 0.0,
                    verbose: bool = True):
-    """Submit each request when its arrival time passes; drive the engine
-    between arrivals. Returns (finished dict, stats dict)."""
-    t0 = time.perf_counter()
-    pending = sorted(workload, key=lambda r: r["arrival_offset_s"])
-    i = 0
-    while i < len(pending) or not server.idle:
-        now = time.perf_counter() - t0
-        while i < len(pending) and pending[i]["arrival_offset_s"] <= now:
-            r = pending[i]
-            sp = SamplingParams(temperature=temperature, seed=i)
-            server.submit(r["prompt"], r["max_new_tokens"], sampling=sp)
-            i += 1
-        if not server.step() and i < len(pending):
-            # idle but arrivals outstanding: wait for the next one
-            time.sleep(max(0.0,
-                           pending[i]["arrival_offset_s"] - now))
+    """Drive the engine against the workload's virtual-time arrivals
+    (open-loop: the loadgen driver stamps each request with its
+    scheduled arrival, so injection lateness lands in queue wait).
+    Returns (finished dict, stats dict)."""
+    loadgen.drive(server, workload, temperature=temperature)
     stats = server.stats()
     if verbose:
         print(f"completed {stats['completed']} requests, "
@@ -143,6 +133,30 @@ def main(argv=None):
     ap.add_argument("--draft-kv-rank", type=int, default=0,
                     help="CUR-KV rank for the DRAFT's paged pool "
                          "(0: same pool config as the target)")
+    # load generation (repro.obs.loadgen) + SLO evaluation
+    ap.add_argument("--arrival", default="staggered",
+                    choices=["staggered", "burst", "poisson", "gamma",
+                             "bursty", "uniform"],
+                    help="arrival process: 'staggered' keeps the legacy "
+                         "fixed-spacing smoke workload; the rest are "
+                         "seeded loadgen processes driven open-loop at "
+                         "--rate QPS (virtual-time arrivals: lateness "
+                         "counts as queue wait)")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="offered rate (requests/s) for loadgen arrivals")
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    help="fraction of requests sharing one of 4 fixed "
+                         "16-token prompt prefixes")
+    ap.add_argument("--workload-trace", default=None,
+                    help="replay a loadgen JSONL trace instead of "
+                         "generating a workload")
+    ap.add_argument("--save-trace", default=None,
+                    help="save the generated workload as a JSONL trace")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="TTFT target (ms); with --slo-tpot-ms, prints "
+                         "SLO attainment + goodput after the run")
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.0,
+                    help="TPOT target (ms) for the SLO evaluation")
     # observability (repro.obs)
     ap.add_argument("--obs", action="store_true",
                     help="route serving metrics through the process-wide "
@@ -203,8 +217,28 @@ def main(argv=None):
         print(out.tokens[:2])
         return
 
-    workload = make_workload(args.n_requests, cfg.vocab_size,
-                             max_new=args.new_tokens)
+    wspec = None
+    if args.workload_trace:
+        workload = loadgen.load_trace(args.workload_trace)
+        print(f"replaying {len(workload)} requests from "
+              f"{args.workload_trace}")
+    elif args.arrival != "staggered":
+        wspec = loadgen.WorkloadSpec(
+            n_requests=args.n_requests, rate_qps=args.rate,
+            arrival=args.arrival,
+            gen=loadgen.LengthDist(kind="fixed", mean=args.new_tokens,
+                                   hi=max(1, args.new_tokens)),
+            vocab_size=cfg.vocab_size,
+            shared_prefix_fraction=args.shared_prefix)
+        workload = loadgen.generate(wspec)
+        print(f"loadgen: {args.arrival} arrivals at {args.rate:g} rps "
+              f"({len(workload)} requests)")
+    else:
+        workload = make_workload(args.n_requests, cfg.vocab_size,
+                                 max_new=args.new_tokens)
+    if args.save_trace:
+        loadgen.save_trace(args.save_trace, workload, spec=wspec)
+        print(f"workload trace -> {args.save_trace}")
     max_len = max(len(r["prompt"]) + r["max_new_tokens"]
                   for r in workload)
     kv_rank = 0
@@ -257,9 +291,27 @@ def main(argv=None):
     print(f"slo: ttft p50 {stats['ttft_p50_s']*1e3:.0f}ms "
           f"p99 {stats['ttft_p99_s']*1e3:.0f}ms | tpot "
           f"p50 {stats['tpot_p50_s']*1e3:.1f}ms "
-          f"p99 {stats['tpot_p99_s']*1e3:.1f}ms | "
+          f"p99 {stats['tpot_p99_s']*1e3:.1f}ms | queue-wait "
+          f"p50 {stats['queue_wait_p50_s']*1e3:.0f}ms "
+          f"p99 {stats['queue_wait_p99_s']*1e3:.0f}ms | "
           f"busy {stats['tokens_per_s_busy']:.1f} tok/s "
           f"(wall {stats['tokens_per_s']:.1f})")
+    if args.slo_ttft_ms or args.slo_tpot_ms:
+        import math
+        spec = slo_mod.SLOSpec(
+            ttft_s=args.slo_ttft_ms / 1e3 or math.inf,
+            tpot_s=args.slo_tpot_ms / 1e3 or math.inf)
+        rep = slo_mod.evaluate(finished.values(), spec,
+                               stats["elapsed_s"])
+        dec = slo_mod.decompose_stats(stats)
+        print(f"slo spec (ttft<={args.slo_ttft_ms:g}ms, "
+              f"tpot<={args.slo_tpot_ms:g}ms): attainment "
+              f"{rep.attainment:.3f} ({rep.n_meeting}/{rep.n_requests})"
+              f" | goodput {rep.goodput_tok_s:.1f} tok/s "
+              f"(throughput {rep.throughput_tok_s:.1f})")
+        print(f"latency split: queue {dec['queue_wait_frac']:.0%} "
+              f"prefill {dec['prefill_frac']:.0%} "
+              f"decode {dec['decode_frac']:.0%}")
     if server.spec_k:
         print(f"speculative: accept rate "
               f"{stats['spec_accept_rate']:.3f} over "

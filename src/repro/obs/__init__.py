@@ -11,6 +11,11 @@ Layered as:
              exposition, JSONL event log, write_all artifact set
   jaxprof    scoped jax.profiler capture + device memory snapshots
              keyed to obs spans
+  loadgen    seeded synthetic workloads (Poisson/gamma/bursty arrivals,
+             mixed length dists, shared-prefix mixes, JSONL trace
+             replay) + the open-loop virtual-time load driver
+  slo        SLO spec + evaluation: attainment, goodput, sliding-window
+             percentiles, queue-wait/prefill/decode decomposition
 
 Metric names are stable and namespaced: ``repro_serving_*`` for the
 runtime (TTFT/TPOT histograms, pool occupancy, spec accept rate,
@@ -20,19 +25,24 @@ progressive rounds. ``benchmarks/bench_serving.py`` computes its SLO
 percentiles from the same histograms the server reports — benchmark
 numbers and production stats share one code path.
 """
+from repro.obs import loadgen, slo
 from repro.obs.export import JsonlLog, snapshot, to_prometheus, write_all
 from repro.obs.jaxprof import JaxProfiler, device_memory_snapshot
+from repro.obs.loadgen import LengthDist, WorkloadSpec
 from repro.obs.metrics import (
     DEFAULT_BUCKETS, NULL, Counter, Gauge, Histogram, Registry, counter,
     default_registry, disable, enable, enabled, gauge, histogram,
     log_buckets)
+from repro.obs.slo import SLOMonitor, SLOSpec
 from repro.obs.trace import (
     ENGINE_TRACK, NULL_CTX, NULL_TRACER, Tracer, request_track)
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "Registry", "Tracer", "JaxProfiler",
-    "JsonlLog", "DEFAULT_BUCKETS", "ENGINE_TRACK", "NULL", "NULL_CTX",
-    "NULL_TRACER", "counter", "default_registry", "device_memory_snapshot",
-    "disable", "enable", "enabled", "gauge", "histogram", "log_buckets",
-    "request_track", "snapshot", "to_prometheus", "write_all",
+    "Counter", "Gauge", "Histogram", "LengthDist", "Registry",
+    "SLOMonitor", "SLOSpec", "Tracer", "JaxProfiler", "JsonlLog",
+    "WorkloadSpec", "DEFAULT_BUCKETS", "ENGINE_TRACK", "NULL",
+    "NULL_CTX", "NULL_TRACER", "counter", "default_registry",
+    "device_memory_snapshot", "disable", "enable", "enabled", "gauge",
+    "histogram", "loadgen", "log_buckets", "request_track", "slo",
+    "snapshot", "to_prometheus", "write_all",
 ]

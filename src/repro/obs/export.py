@@ -34,17 +34,39 @@ def _prom_name(name: str) -> str:
     return name.replace(".", "_").replace("-", "_").replace("/", "_")
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus label-value escaping: backslash, double-quote, and
+    newline must be escaped inside the quoted value."""
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    """``# HELP`` escaping: backslash and newline (quotes are legal)."""
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _prom_type(t: str) -> str:
+    """Snapshot type -> exposition type. Windowed histograms expose the
+    same cumulative bucket/sum/count series as plain histograms (only
+    their percentile basis differs), so both are ``histogram``."""
+    if t.startswith("labeled_"):
+        t = t[len("labeled_"):]
+    return "histogram" if t == "windowed_histogram" else t
+
+
 def _labels_suffix(key: str) -> str:
     """``stage=prefill,arch=olmo`` -> ``{stage="prefill",arch="olmo"}``"""
     if not key:
         return ""
     parts = [p.split("=", 1) for p in key.split(",")]
-    return "{" + ",".join(f'{n}="{v}"' for n, v in parts) + "}"
+    return "{" + ",".join(f'{n}="{_escape_label_value(v)}"'
+                          for n, v in parts) + "}"
 
 
 def _prom_emit(lines, name, snap, label_key=""):
     suffix = _labels_suffix(label_key)
-    t = snap["type"]
+    t = _prom_type(snap["type"])
     if t in ("counter", "gauge"):
         lines.append(f"{name}{suffix} {snap['value']}")
     elif t == "histogram":
@@ -62,17 +84,21 @@ def _prom_emit(lines, name, snap, label_key=""):
 
 
 def to_prometheus(registry: Registry) -> str:
-    """Prometheus text exposition of every instrument."""
+    """Prometheus text exposition of every instrument (``# HELP`` +
+    ``# TYPE`` + samples; label values and help text escaped per the
+    text-format spec)."""
     lines = []
     for name, snap in sorted(registry.snapshot().items()):
+        inst = registry.get(name)
         pname = _prom_name(name)
-        t = snap["type"]
-        if t.startswith("labeled_"):
-            lines.append(f"# TYPE {pname} {t[len('labeled_'):]}")
+        help_text = getattr(inst, "help", "") if inst is not None else ""
+        if help_text:
+            lines.append(f"# HELP {pname} {_escape_help(help_text)}")
+        lines.append(f"# TYPE {pname} {_prom_type(snap['type'])}")
+        if snap["type"].startswith("labeled_"):
             for key, child in snap["children"].items():
                 _prom_emit(lines, pname, child, key)
         else:
-            lines.append(f"# TYPE {pname} {t}")
             _prom_emit(lines, pname, snap)
     return "\n".join(lines) + "\n"
 

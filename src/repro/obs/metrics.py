@@ -132,14 +132,23 @@ class Histogram:
     update. Percentiles come from the reservoir: exact while
     ``count <= reservoir_size``, an unbiased uniform subsample after
     (Vitter's algorithm R, seeded per instrument for reproducibility).
+
+    ``window > 0`` switches the percentile source to a ring buffer of
+    the last ``window`` observations — sliding-window percentiles for
+    online SLO evaluation (a p99 that recovers when the incident ends,
+    instead of averaging it away). Bucket counts, sum, count, min and
+    max stay cumulative in both modes, so the Prometheus exposition is
+    identical; only the percentile basis changes.
     """
     __slots__ = ("name", "help", "buckets", "bucket_counts", "_sum",
-                 "_count", "_min", "_max", "_reservoir", "_rsize", "_rng")
+                 "_count", "_min", "_max", "_reservoir", "_rsize", "_rng",
+                 "window", "_ring", "_ring_i")
     kind = "histogram"
 
     def __init__(self, name: str, help: str = "",
                  buckets: Optional[Sequence[float]] = None,
-                 reservoir_size: int = RESERVOIR_SIZE):
+                 reservoir_size: int = RESERVOIR_SIZE,
+                 window: int = 0):
         self.name = name
         self.help = help
         bs = tuple(buckets) if buckets is not None else DEFAULT_BUCKETS
@@ -155,6 +164,11 @@ class Histogram:
         self._reservoir: List[float] = []
         self._rsize = reservoir_size
         self._rng = random.Random(hash(name) & 0xFFFFFFFF)
+        if window < 0:
+            raise ValueError(f"histogram {name}: window must be >= 0")
+        self.window = int(window)
+        self._ring: List[float] = []
+        self._ring_i = 0
 
     def observe(self, v: float) -> None:
         self.bucket_counts[bisect.bisect_left(self.buckets, v)] += 1
@@ -164,6 +178,13 @@ class Histogram:
             self._min = v
         if v > self._max:
             self._max = v
+        if self.window:
+            if len(self._ring) < self.window:
+                self._ring.append(v)
+            else:
+                self._ring[self._ring_i] = v
+                self._ring_i = (self._ring_i + 1) % self.window
+            return
         if len(self._reservoir) < self._rsize:
             self._reservoir.append(v)
         else:
@@ -191,16 +212,21 @@ class Histogram:
     def max(self) -> float:
         return self._max if self._count else 0.0
 
+    def _samples(self) -> List[float]:
+        """Percentile basis: the ring (windowed) or the reservoir."""
+        return self._ring if self.window else self._reservoir
+
     def percentile(self, p: float) -> float:
-        """p in [0, 100]; 0.0 when empty (nearest-rank on the reservoir)."""
-        if not self._reservoir:
+        """p in [0, 100]; 0.0 when empty (nearest-rank on the samples)."""
+        xs = self._samples()
+        if not xs:
             return 0.0
-        xs = sorted(self._reservoir)
+        xs = sorted(xs)
         idx = min(len(xs) - 1, max(0, math.ceil(p / 100.0 * len(xs)) - 1))
         return xs[idx]
 
     def percentiles(self, ps: Iterable[float] = (50, 90, 99)) -> dict:
-        xs = sorted(self._reservoir)
+        xs = sorted(self._samples())
         out = {}
         for p in ps:
             if not xs:
@@ -212,12 +238,18 @@ class Histogram:
         return out
 
     def snapshot(self) -> dict:
-        return {"type": "histogram", "count": self._count,
+        snap = {"type": "windowed_histogram" if self.window
+                else "histogram",
+                "count": self._count,
                 "sum": self._sum, "mean": self.mean,
                 "min": self.min, "max": self.max,
                 "buckets": list(self.buckets),
                 "bucket_counts": list(self.bucket_counts),
                 **self.percentiles()}
+        if self.window:
+            snap["window"] = self.window
+            snap["window_count"] = len(self._ring)
+        return snap
 
 
 _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
@@ -327,9 +359,9 @@ class Registry:
     def histogram(self, name: str, help: str = "",
                   labels: Sequence[str] = (),
                   buckets: Optional[Sequence[float]] = None,
-                  overflow: str = "raise"):
+                  overflow: str = "raise", window: int = 0):
         return self._get(name, "histogram", help, labels, overflow,
-                         buckets=buckets)
+                         buckets=buckets, window=window)
 
     def names(self) -> List[str]:
         return sorted(self._instruments)
@@ -380,8 +412,10 @@ def gauge(name: str, help: str = "", labels: Sequence[str] = ()):
 
 
 def histogram(name: str, help: str = "", labels: Sequence[str] = (),
-              buckets: Optional[Sequence[float]] = None):
-    return _DEFAULT.histogram(name, help, labels, buckets=buckets)
+              buckets: Optional[Sequence[float]] = None,
+              window: int = 0):
+    return _DEFAULT.histogram(name, help, labels, buckets=buckets,
+                              window=window)
 
 
 def snapshot() -> dict:

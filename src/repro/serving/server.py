@@ -294,6 +294,13 @@ class Server:
             "repro_serving_decode_tokens_total", "tokens from decode")
         self._h_ttft = m.histogram(
             "repro_serving_ttft_s", "time to first token (s)")
+        # submit -> first prefill: the load-dependent part of TTFT. A
+        # request submitted with a virtual (scheduled) arrival counts
+        # the injection lateness here too — open-loop drivers stamp
+        # arrivals so queue wait is never silently rebased
+        self._h_queue_wait = m.histogram(
+            "repro_serving_queue_wait_s",
+            "request wait from submission to first prefill (s)")
         self._h_tpot = m.histogram(
             "repro_serving_tpot_s",
             "per-token decode latency per step (s)")
@@ -530,6 +537,7 @@ class Server:
                 # re-prefill only rebuilt the cache — nothing to sample
                 sched.slots[slot_id].next_token = req.out_tokens[-1]
                 continue
+            self._h_queue_wait.observe(now - req.arrival)
             req.ttft = t_now - req.arrival
             self._h_ttft.observe(req.ttft)
             req.out_tokens.append(int(toks[slot_id]))
@@ -817,6 +825,7 @@ class Server:
         ttft, tpot, qd = (hist("repro_serving_ttft_s"),
                           hist("repro_serving_tpot_s"),
                           hist("repro_serving_queue_depth"))
+        qw = hist("repro_serving_queue_wait_s")
         return {
             "completed": int(
                 val("repro_serving_requests_completed_total")),
@@ -834,6 +843,13 @@ class Server:
             "ttft_p99_s": ttft["p99"],
             "tpot_p50_s": tpot["p50"],
             "tpot_p99_s": tpot["p99"],
+            # submit -> first prefill: the load-dependent TTFT component
+            # (TTFT = queue wait + prefill); total feeds the queue-wait
+            # vs prefill vs decode decomposition in repro.obs.slo
+            "queue_wait_mean_s": qw["mean"],
+            "queue_wait_p50_s": qw["p50"],
+            "queue_wait_p99_s": qw["p99"],
+            "queue_wait_total_s": qw["sum"],
             "queue_depth_mean": qd["mean"],
             "queue_depth_max": int(qd["max"]),
             "n_prefill_steps": int(

@@ -1,0 +1,184 @@
+"""The noise-aware regression gate (benchmarks/compare.py).
+
+Pass / warn / fail semantics on synthetic envelopes: identical
+envelopes pass, a 20% TTFT regression is flagged, recorded noise widens
+tolerances, the machine-variance guard downgrades whole-class timing
+shifts, and ratio metrics still gate when the guard is active."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks import compare
+from benchmarks.compare import (
+    MetricSpec, Verdict, compare_module, get_path, run_compare)
+
+
+def _env(results, quick=True):
+    return {"schema_version": 1, "suite": "curing-repro-bench",
+            "module": "bench_serving", "quick": quick, "obs": {},
+            "results": results}
+
+
+SERVING_RESULTS = {
+    "speedup_continuous_vs_static": 2.0,
+    "curkv_cache_byte_ratio": 0.5,
+    "zoo_decode_tok_s": 500.0,
+    "decode_tok_s": {"continuous": 9000.0},
+    "slo": {"burst": {"ttft_p99_s": 0.10},
+            "staggered-10ms": {"ttft_p99_s": 0.12}},
+    "long_prompt": {"prefill_speedup": 1.5},
+    "speculative": {"speedup_vs_baseline": 1.6, "accept_rate": 1.0},
+}
+
+
+def test_get_path():
+    obj = {"a": {"b": [10, {"c": 3}]}}
+    assert get_path(obj, "a.b.0") == 10
+    assert get_path(obj, "a.b.1.c") == 3
+    assert get_path(obj, "a.x") is None
+    assert get_path(obj, "a.b.9") is None
+    assert get_path(obj, "a.b.0.c") is None
+
+
+def test_identical_envelopes_pass():
+    e = _env(SERVING_RESULTS)
+    vs = compare_module("bench_serving", e, copy.deepcopy(e))
+    assert vs and all(v.status == "PASS" for v in vs)
+
+
+def test_ttft_regression_flagged():
+    """The acceptance case: +20% TTFT p99 must be flagged (tol 15%)."""
+    fresh = copy.deepcopy(SERVING_RESULTS)
+    fresh["slo"]["burst"]["ttft_p99_s"] *= 1.20
+    vs = compare_module("bench_serving", _env(SERVING_RESULTS),
+                        _env(fresh))
+    by = {v.path: v for v in vs}
+    assert by["slo.burst.ttft_p99_s"].status == "FAIL"
+    assert by["slo.burst.ttft_p99_s"].regression == pytest.approx(0.20)
+    # everything else untouched
+    assert by["speedup_continuous_vs_static"].status == "PASS"
+
+
+def test_direction_matters():
+    """Improvements never flag, in either metric direction."""
+    fresh = copy.deepcopy(SERVING_RESULTS)
+    fresh["slo"]["burst"]["ttft_p99_s"] *= 0.5      # faster: good
+    fresh["zoo_decode_tok_s"] *= 2.0                # more tok/s: good
+    vs = compare_module("bench_serving", _env(SERVING_RESULTS),
+                        _env(fresh))
+    assert all(v.status == "PASS" for v in vs)
+    # throughput drop beyond tol flags
+    fresh = copy.deepcopy(SERVING_RESULTS)
+    fresh["zoo_decode_tok_s"] *= 0.6                # -40% vs tol 30%
+    by = {v.path: v for v in compare_module(
+        "bench_serving", _env(SERVING_RESULTS), _env(fresh))}
+    assert by["zoo_decode_tok_s"].status == "FAIL"
+
+
+def test_recorded_noise_widens_tolerance():
+    base = copy.deepcopy(SERVING_RESULTS)
+    base["noise"] = {"rel_spread": 0.10}    # 10% spread * K=3 -> 30% tol
+    fresh = copy.deepcopy(base)
+    fresh["slo"]["burst"]["ttft_p99_s"] *= 1.20     # within widened tol
+    vs = compare_module("bench_serving", _env(base), _env(fresh))
+    by = {v.path: v for v in vs}
+    assert by["slo.burst.ttft_p99_s"].status == "PASS"
+    assert by["slo.burst.ttft_p99_s"].tol == pytest.approx(0.30)
+
+
+def test_machine_guard_downgrades_timing_not_ratio():
+    """Whole timing class slows 40% (machine moved) -> timing FAILs
+    become WARNs; a genuine ratio regression still FAILs."""
+    fresh = copy.deepcopy(SERVING_RESULTS)
+    fresh["zoo_decode_tok_s"] /= 1.6           # -37.5% vs tol 30%
+    fresh["decode_tok_s"]["continuous"] /= 1.6
+    fresh["slo"]["burst"]["ttft_p99_s"] *= 1.4
+    fresh["slo"]["staggered-10ms"]["ttft_p99_s"] *= 1.4
+    fresh["speedup_continuous_vs_static"] = 1.0     # real regression
+    vs = compare_module("bench_serving", _env(SERVING_RESULTS),
+                        _env(fresh))
+    by = {v.path: v for v in vs}
+    assert by["slo.burst.ttft_p99_s"].status == "WARN"
+    assert by["zoo_decode_tok_s"].status == "WARN"
+    assert "machine guard" in by["zoo_decode_tok_s"].note
+    assert by["speedup_continuous_vs_static"].status == "FAIL"
+
+
+def test_single_metric_regression_not_guarded():
+    """One timing metric regressing alone is NOT a machine shift: the
+    median across the timing class stays ~0, so it still FAILs."""
+    fresh = copy.deepcopy(SERVING_RESULTS)
+    fresh["slo"]["burst"]["ttft_p99_s"] *= 2.0
+    vs = compare_module("bench_serving", _env(SERVING_RESULTS),
+                        _env(fresh))
+    by = {v.path: v for v in vs}
+    assert by["slo.burst.ttft_p99_s"].status == "FAIL"
+
+
+def test_missing_metric_and_quick_mismatch():
+    fresh = copy.deepcopy(SERVING_RESULTS)
+    del fresh["speculative"]
+    vs = compare_module("bench_serving", _env(SERVING_RESULTS),
+                        _env(fresh))
+    by = {v.path: v for v in vs}
+    assert by["speculative.speedup_vs_baseline"].status == "MISSING"
+    assert by["zoo_decode_tok_s"].status == "PASS"
+    vs = compare_module("bench_serving", _env(SERVING_RESULTS),
+                        _env(SERVING_RESULTS, quick=False))
+    assert len(vs) == 1 and vs[0].status == "MISSING"
+    assert "not comparable" in vs[0].note
+
+
+def test_run_compare_dirs_and_exit_codes(tmp_path):
+    base_d, fresh_d = tmp_path / "base", tmp_path / "fresh"
+    base_d.mkdir(), fresh_d.mkdir()
+    with open(base_d / "BENCH_serving.json", "w") as f:
+        json.dump(_env(SERVING_RESULTS), f)
+    fresh = copy.deepcopy(SERVING_RESULTS)
+    with open(fresh_d / "BENCH_serving.json", "w") as f:
+        json.dump(_env(fresh), f)
+    vs = run_compare(str(base_d), str(fresh_d), only=["bench_serving"])
+    assert all(v.status == "PASS" for v in vs)
+    # other modules' envelopes absent -> MISSING rows, not crashes
+    vs = run_compare(str(base_d), str(fresh_d))
+    assert any(v.status == "MISSING" and v.module == "bench_fleet"
+               for v in vs)
+    # CLI: warn-first exits 0 even on FAIL; --strict exits 1
+    fresh["slo"]["burst"]["ttft_p99_s"] *= 1.5
+    with open(fresh_d / "BENCH_serving.json", "w") as f:
+        json.dump(_env(fresh), f)
+    argv = ["--baseline-dir", str(base_d), "--fresh-dir", str(fresh_d),
+            "--only", "bench_serving", "--json",
+            str(tmp_path / "gate.json")]
+    assert compare.main(argv) == 0
+    assert compare.main(argv + ["--strict"]) == 1
+    gate = json.load(open(tmp_path / "gate.json"))
+    assert any(v["status"] == "FAIL"
+               and v["path"] == "slo.burst.ttft_p99_s" for v in gate)
+
+
+def test_gate_covers_fleet_and_all_modules_named():
+    """Every gated module maps to a real BENCH_<name>.json filename and
+    every spec path is well-formed (no accidental list-index typos)."""
+    for module, specs in compare.GATES.items():
+        assert module.startswith("bench_")
+        for s in specs:
+            assert isinstance(s, MetricSpec)
+            assert s.direction in ("higher", "lower")
+            assert 0 < s.rel_tol < 1
+    assert "bench_fleet" in compare.GATES
+
+
+def test_checked_in_envelopes_self_compare():
+    """The repo-root BENCH_*.json baselines must pass against
+    themselves (the gate's sanity floor)."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    present = [m for m in compare.GATES
+               if os.path.exists(os.path.join(
+                   root, f"BENCH_{m.replace('bench_', '')}.json"))]
+    assert present, "no checked-in envelopes found"
+    vs = run_compare(root, root, only=present)
+    bad = [v for v in vs if v.status == "FAIL"]
+    assert not bad, [v.row() for v in bad]

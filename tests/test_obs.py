@@ -155,6 +155,102 @@ def test_prometheus_exposition():
     assert 'occ{pool="kv"} 7.0' in text
 
 
+def _parse_prometheus(text):
+    """Strict text-format parser: every line must be a well-formed
+    comment (`# HELP name text` / `# TYPE name type`) or a sample
+    (`name{labels} value`), with label values unescaped per the spec.
+    Returns (types, helps, samples[(name, labels-dict, value)])."""
+    types, helps, samples = {}, {}, []
+    valid_types = {"counter", "gauge", "histogram", "summary",
+                   "untyped"}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split(" ", 3)
+            assert len(parts) >= 4 and parts[1] in ("HELP", "TYPE"), line
+            if parts[1] == "TYPE":
+                assert parts[3] in valid_types, line
+                types[parts[2]] = parts[3]
+            else:
+                helps[parts[2]] = parts[3]
+            continue
+        # sample: name[{labels}] value
+        m_name, rest = line.split("{", 1) if "{" in line \
+            else (line.split(" ", 1)[0], None)
+        labels = {}
+        if rest is not None:
+            body, tail = rest.rsplit("} ", 1)
+            i = 0
+            while i < len(body):
+                eq = body.index("=", i)
+                key = body[i:eq]
+                assert body[eq + 1] == '"', line
+                j, val = eq + 2, []
+                while body[j] != '"':
+                    if body[j] == "\\":
+                        nxt = body[j + 1]
+                        val.append({"n": "\n", "\\": "\\",
+                                    '"': '"'}[nxt])
+                        j += 2
+                    else:
+                        val.append(body[j])
+                        j += 1
+                labels[key] = "".join(val)
+                i = j + 1
+                if i < len(body) and body[i] == ",":
+                    i += 1
+            value = tail
+        else:
+            value = line.split(" ", 1)[1]
+        float(value)                     # must parse
+        samples.append((m_name, labels, float(value)))
+    return types, helps, samples
+
+
+def test_prometheus_strict_roundtrip_with_escaping():
+    """Hostile label values and help text survive exposition: a strict
+    parser recovers the exact original strings."""
+    reg = Registry()
+    hostile = 'a"b\\c\nd'
+    reg.counter("esc_total", 'help with \\ and\nnewline',
+                labels=("path",)).labels(path=hostile).inc(2)
+    g = reg.gauge("plain", "plain help")
+    g.set(1.5)
+    text = obs.to_prometheus(reg)
+    types, helps, samples = _parse_prometheus(text)
+    assert types["esc_total"] == "counter"
+    assert types["plain"] == "gauge"
+    # HELP escapes backslash + newline (spec: \\ and \n)
+    assert helps["esc_total"] == "help with \\\\ and\\nnewline"
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+    assert by_name["esc_total"] == [({"path": hostile}, 2.0)]
+    assert by_name["plain"] == [({}, 1.5)]
+
+
+def test_prometheus_windowed_histogram_type():
+    """Windowed histograms expose as plain `histogram` (the window only
+    changes the percentile basis, not the cumulative bucket series)."""
+    reg = Registry()
+    h = reg.histogram("win_s", "windowed", buckets=(0.1, 1.0), window=4)
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    text = obs.to_prometheus(reg)
+    types, _helps, samples = _parse_prometheus(text)
+    assert types["win_s"] == "histogram"
+    buckets = {lbl["le"]: v for n, lbl, v in samples
+               if n == "win_s_bucket"}
+    assert buckets == {"0.1": 1.0, "1": 2.0, "+Inf": 3.0}
+    assert ("win_s_count", {}, 3.0) in samples
+    # labeled windowed family maps the same way
+    fam = reg.histogram("win_fam_s", labels=("k",), window=4)
+    fam.labels(k="a").observe(1.0)
+    types, _h, _s = _parse_prometheus(obs.to_prometheus(reg))
+    assert types["win_fam_s"] == "histogram"
+
+
 def test_jsonl_log_roundtrip(tmp_path):
     p = str(tmp_path / "events.jsonl")
     log = obs.JsonlLog(p)

@@ -1,0 +1,169 @@
+"""SLO evaluation math on hand-computed fixtures + windowed percentiles.
+
+The attainment/goodput numbers are checked against worked-by-hand
+values; the sliding-window Histogram mode is checked against a naive
+sorted-tail reference across window sizes."""
+import math
+import types
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import Histogram, Registry
+from repro.obs.slo import (
+    SLOMonitor, SLOSpec, decompose, decompose_stats, evaluate,
+    request_metrics)
+
+
+def _req(rid, arrival, ttft, n_tokens, finish):
+    """Minimal stand-in for serving.scheduler.Request."""
+    return types.SimpleNamespace(rid=rid, arrival=arrival, ttft=ttft,
+                                 out_tokens=list(range(n_tokens)),
+                                 finish_time=finish)
+
+
+def test_request_metrics():
+    m = request_metrics(_req(0, 10.0, 0.5, 5, 12.5))
+    # e2e = 2.5s, decode = 2.0s over 4 inter-token gaps -> tpot 0.5
+    assert m["ttft_s"] == 0.5
+    assert m["e2e_s"] == pytest.approx(2.5)
+    assert m["tpot_s"] == pytest.approx(0.5)
+    assert m["n_tokens"] == 5
+    # single-token request: no decode phase, tpot 0
+    assert request_metrics(_req(1, 0.0, 0.1, 1, 0.1))["tpot_s"] == 0.0
+    # no first token recorded -> not scoreable
+    assert request_metrics(_req(2, 0.0, None, 0, None)) is None
+
+
+def test_evaluate_hand_computed():
+    spec = SLOSpec(ttft_s=1.0, tpot_s=0.25, attainment=0.5)
+    reqs = [
+        # ttft ok, tpot = 0.9/9 = 0.1 ok          -> meets, 10 tokens
+        _req(0, 0.0, 0.5, 10, 1.4),
+        # ttft 2.0 > 1.0                           -> misses, 4 tokens
+        _req(1, 0.0, 2.0, 4, 2.3),
+        # ttft ok, tpot = 1.5/3 = 0.5 > 0.25       -> misses, 4 tokens
+        _req(2, 1.0, 0.5, 4, 3.0),
+        # ttft ok, tpot = 0.2/1 = 0.2 ok           -> meets, 2 tokens
+        _req(3, 0.0, 1.0, 2, 1.2),
+        # unscoreable (dropped from every count)
+        _req(4, 0.0, None, 0, None),
+    ]
+    rep = evaluate(reqs, spec, elapsed_s=10.0)
+    assert rep.n_requests == 4
+    assert rep.n_meeting == 2
+    assert rep.attainment == pytest.approx(0.5)
+    assert rep.met is True                      # 0.5 >= 0.5 promised
+    assert rep.tokens_total == 20
+    assert rep.tokens_meeting == 12
+    assert rep.throughput_tok_s == pytest.approx(2.0)
+    assert rep.goodput_tok_s == pytest.approx(1.2)
+    # percentiles over ttfts [0.5, 2.0, 0.5, 1.0]: nearest-rank
+    assert rep.ttft_p50_s == pytest.approx(0.5)
+    assert rep.ttft_p99_s == pytest.approx(2.0)
+    # stricter promise flips `met` without moving attainment
+    rep2 = evaluate(reqs, SLOSpec(ttft_s=1.0, tpot_s=0.25,
+                                  attainment=0.9), 10.0)
+    assert rep2.attainment == pytest.approx(0.5) and rep2.met is False
+    # empty set: everything zero, not NaN
+    rep3 = evaluate([], spec, 10.0)
+    assert rep3.n_requests == 0 and rep3.attainment == 0.0
+    assert rep3.met is False and rep3.goodput_tok_s == 0.0
+
+
+def test_slospec_json_and_inf():
+    spec = SLOSpec(ttft_s=0.5)
+    assert spec.tpot_s == math.inf          # disabled dimension
+    assert spec.meets(0.5, 1e9)
+    assert not spec.meets(0.51, 0.0)
+    assert SLOSpec.from_json(spec.to_json()) == spec
+
+
+def _naive_pctl(xs, p):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1,
+                  max(0, math.ceil(p / 100 * len(xs)) - 1))]
+
+
+@pytest.mark.parametrize("window", [4, 16, 100])
+def test_windowed_histogram_vs_reference(window):
+    """Ring-buffer percentiles == naive percentiles over the last
+    `window` observations, at every prefix of the stream."""
+    rng = np.random.default_rng(0)
+    h = Histogram("w", window=window)
+    stream = rng.lognormal(0.0, 1.0, 300).tolist()
+    for i, x in enumerate(stream):
+        h.observe(x)
+        tail = stream[max(0, i + 1 - window):i + 1]
+        for p in (50, 90, 99):
+            assert h.percentile(p) == pytest.approx(_naive_pctl(tail, p))
+    snap = h.snapshot()
+    assert snap["type"] == "windowed_histogram"
+    assert snap["window"] == window
+    assert snap["window_count"] == min(window, 300)
+    assert snap["count"] == 300                 # cumulative, not windowed
+
+
+def test_windowed_histogram_forgets_incident():
+    h = Histogram("w", window=10)
+    for _ in range(50):
+        h.observe(10.0)                         # the incident
+    for _ in range(10):
+        h.observe(0.1)                          # recovery fills window
+    assert h.percentile(99) == pytest.approx(0.1)
+    # a cumulative-reservoir histogram would still remember the spike
+    hc = Histogram("c")
+    for _ in range(50):
+        hc.observe(10.0)
+    for _ in range(10):
+        hc.observe(0.1)
+    assert hc.percentile(99) == pytest.approx(10.0)
+
+
+def test_slo_monitor_windowed():
+    spec = SLOSpec(ttft_s=1.0, tpot_s=1.0, attainment=0.8)
+    reg = Registry(enabled=True)
+    mon = SLOMonitor(spec, window=8, registry=reg)
+    for _ in range(8):                          # bad period
+        assert mon.observe(5.0, 5.0, n_tokens=3) is False
+    r = mon.report()
+    assert r["attainment_window"] == 0.0 and r["met_window"] is False
+    for _ in range(8):                          # recovery
+        assert mon.observe(0.1, 0.1, n_tokens=3) is True
+    r = mon.report()
+    assert r["attainment_window"] == 1.0 and r["met_window"] is True
+    assert r["attainment"] == pytest.approx(0.5)    # cumulative view
+    assert r["ttft_p99_s"] == pytest.approx(0.1)    # window forgot spike
+    assert r["tokens_total"] == 48 and r["tokens_meeting"] == 24
+    # histograms registered into the caller's registry for export
+    assert "repro_slo_ttft_s" in reg.snapshot()
+
+
+def test_slo_monitor_observe_request():
+    mon = SLOMonitor(SLOSpec(ttft_s=1.0), window=4)
+    assert mon.observe_request(_req(0, 0.0, 0.5, 3, 1.0)) is True
+    assert mon.observe_request(_req(1, 0.0, None, 0, None)) is None
+    assert mon.n_requests == 1
+
+
+def test_decompose_from_tracer_durations():
+    tracer = types.SimpleNamespace(durations=lambda: {
+        "queued": 2.0, "restore": 1.0, "prefill": 3.0,
+        "decode_window": 3.0, "spec_draft": 0.5, "spec_verify": 0.5,
+        "unrelated_span": 99.0})
+    d = decompose(tracer)
+    assert d["queue_wait_s"] == pytest.approx(3.0)
+    assert d["prefill_s"] == pytest.approx(3.0)
+    assert d["decode_s"] == pytest.approx(4.0)
+    assert d["queue_wait_frac"] == pytest.approx(0.3)
+    assert (d["queue_wait_frac"] + d["prefill_frac"]
+            + d["decode_frac"]) == pytest.approx(1.0)
+
+
+def test_decompose_from_server_stats():
+    d = decompose_stats({"queue_wait_total_s": 1.0,
+                         "prefill_time_s": 1.0, "decode_time_s": 2.0})
+    assert d["decode_frac"] == pytest.approx(0.5)
+    assert d["queue_wait_frac"] == pytest.approx(0.25)
+    empty = decompose_stats({})
+    assert empty["queue_wait_frac"] == 0.0      # no NaN on empty stats
