@@ -21,8 +21,19 @@ offered rates together. Offered-rate fractions are of the dense
 config's measured burst capacity; every config serves byte-identical
 request streams at each rate (same workload seed).
 
+The ``--chaos`` scenario (also folded into ``run_results`` as
+``results["chaos"]``) drives the same server through seeded fault
+plans — one run per fault class (latency spikes, transient
+prefill/decode errors, pool squeeze, queue storm) plus a
+deadline-bearing overload run with a bounded queue — reporting SLO
+attainment/goodput per class and *asserting* the resilience
+invariants: the pool drains back to full, refcounts conserve,
+surviving requests' greedy outputs stay bit-identical to a fault-free
+baseline, the same plan+seed replays the identical fault sequence, and
+shed/timed-out requests count against attainment.
+
     PYTHONPATH=src python -m benchmarks.bench_fleet --quick \
-        [--out fleet.json] [--csv sweep.csv]
+        [--chaos] [--out fleet.json] [--csv sweep.csv]
 """
 import argparse
 import csv
@@ -38,7 +49,8 @@ from repro.configs import get_smoke
 from repro.models import init_params
 from repro.obs import loadgen
 from repro.obs.slo import SLOSpec, decompose_stats, evaluate
-from repro.serving import PagedConfig, Server
+from repro.serving import PagedConfig, ResilienceConfig, Server
+from repro.testing import ChaosEngine, FaultPlan, FaultSpec
 
 ARCH = "olmo-1b"
 ATTAINMENT = 0.9              # the promised SLO fraction
@@ -132,6 +144,181 @@ def _knee(rows, attainment: float) -> dict:
                 "interpolated": True}
     return {"max_sustainable_qps": prev["offered_qps"],
             "saturated": False, "interpolated": False}
+
+
+# ---------------------------------------------------------------------------
+# chaos scenario: SLO under injected faults + resilience invariants
+# ---------------------------------------------------------------------------
+
+CHAOS_SEED = 71
+#: fault plan per class. Burst arrivals make the engine's step sequence
+#: timing-independent, so the seeded per-(fault, step) draws land on the
+#: same steps every run — the replay-determinism invariant is checkable.
+CHAOS_CLASSES = {
+    "latency_spike": [FaultSpec("latency_spike", start_step=2,
+                                end_step=12, probability=0.5,
+                                magnitude=0.002)],
+    "transient_error": [FaultSpec("transient_error", start_step=2,
+                                  end_step=30, probability=0.4,
+                                  site="any")],
+    "pool_squeeze": [FaultSpec("pool_squeeze", start_step=3,
+                               end_step=24, magnitude=0.5)],
+    "queue_storm": [FaultSpec("queue_storm", start_step=4, end_step=6,
+                              probability=1.0, n=3)],
+}
+
+
+def _chaos_bench(quick: bool = True):
+    """Per-fault-class SLO + invariant runs, plus a deadline-bearing
+    overload run. Raises if any resilience invariant fails — in CI this
+    is an assertion suite that happens to produce numbers."""
+    cfg = get_smoke(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    C = 4
+    n_req = 10 if quick else 20
+    max_len = max(PROMPT_LENS) + max(GEN_LENS)
+    pc = PagedConfig.sized_for(max_len, C)
+
+    wspec = dataclasses.replace(
+        _workload_spec(n_req, 0.0, cfg.vocab_size, seed=CHAOS_SEED),
+        arrival="burst")
+    workload = loadgen.generate(wspec)
+
+    def serve(plan=None, res=None):
+        ch = ChaosEngine(plan) if plan is not None else None
+        srv = Server(params, cfg, pc, max_concurrency=C,
+                     resilience=res, chaos=ch)
+        rep = loadgen.drive(srv, workload)
+        if ch is not None:
+            ch.finish(srv)       # release still-open squeeze windows
+        srv.drain()
+        return srv, rep, ch
+
+    def obs_subset(srv):
+        # each Server owns a private registry; lift the chaos/resilience
+        # instruments into the envelope so fault counts and ladder
+        # transitions are visible in the obs snapshot, not just derived
+        return {k: v for k, v in srv.obs.snapshot().items()
+                if k.startswith(("repro_chaos_",
+                                 "repro_serving_degradation_",
+                                 "repro_serving_requests_failed_",
+                                 "repro_serving_step_faults_"))}
+
+    # warm the jit cache, then a fault-free baseline: the bit-identity
+    # reference and the SLO anchor (unloaded-ish burst latency)
+    _serve(lambda: Server(params, cfg, pc, max_concurrency=C),
+           _shape_coverage_wl(cfg.vocab_size))
+    base_srv, base_rep, _ = serve()
+    base_st = base_srv.stats()
+    base_out = {r.rid: tuple(r.out_tokens)
+                for r in base_srv.finished.values()}
+    slo = SLOSpec(ttft_s=max(5.0 * base_st["ttft_p50_s"], 0.05),
+                  tpot_s=max(3.0 * base_st["tpot_p50_s"], 0.005),
+                  attainment=ATTAINMENT)
+
+    problems = []
+    rows = []
+    classes = {}
+    for kind, faults in CHAOS_CLASSES.items():
+        plan = FaultPlan(faults, seed=CHAOS_SEED)
+        srv, rep, ch = serve(plan=plan)
+        st = srv.stats()
+        alloc = srv.scheduler.alloc
+        # the original requests must all still complete (faults here are
+        # transient, never fatal) with outputs bit-identical to the
+        # fault-free baseline — greedy decode is per-request
+        # deterministic whatever the batch composition did around it
+        complete = all(
+            rid in srv.finished
+            and srv.finished[rid].finish_reason in ("eos", "length")
+            for rid in base_out)
+        inv = {
+            "pool_drained": alloc.n_free == pc.n_blocks,
+            "refcounts_conserved": not alloc._ref,
+            "requests_completed": complete,
+            "untouched_bit_identical": complete and all(
+                tuple(srv.finished[rid].out_tokens) == toks
+                for rid, toks in base_out.items()),
+        }
+        # replay: a fresh engine from the plan's JSON round-trip must
+        # inject the identical fault sequence
+        _srv2, _rep2, ch2 = serve(
+            plan=FaultPlan.from_json(plan.to_json()))
+        inv["replay_identical"] = ch2.event_log() == ch.event_log()
+        problems += [f"{kind}: {k}" for k, ok in inv.items() if not ok]
+        ev = evaluate(srv.finished.values(), slo, rep.duration_s)
+        classes[kind] = {
+            "plan": plan.to_json(),
+            "n_events": len(ch.events),
+            "events": ch.event_log(),
+            "step_faults": st["step_faults"],
+            "failed": st["failed"],
+            "degradation_transitions": list(srv.ladder.transitions),
+            "n_finished": ev.n_requests,
+            "attainment": ev.attainment,
+            "goodput_tok_s": ev.goodput_tok_s,
+            "throughput_tok_s": ev.throughput_tok_s,
+            "invariants": inv,
+            "obs": obs_subset(srv),
+        }
+        rows.append((
+            f"fleet/chaos/{kind}",
+            1e6 * rep.duration_s / max(ev.n_requests, 1),
+            f"att={ev.attainment:.2f} events={len(ch.events)} "
+            f"faults={st['step_faults']} "
+            f"goodput={ev.goodput_tok_s:.0f}tok/s"))
+
+    # -- deadline-bearing overload: shed must count against the SLO ----
+    res = ResilienceConfig(max_queue=4, overload_policy="shed-oldest",
+                           ttft_deadline_s=10.0, deadline_s=30.0)
+    osrv, orep, _ = serve(res=res)
+    oev = evaluate(osrv.finished.values(), slo, orep.duration_s)
+    shed = oev.failures.get("shed", 0)
+    over_inv = {
+        # every offered request lands in the denominator — shedding can
+        # shrink the numerator only
+        "all_offered_in_denominator": oev.n_requests == n_req,
+        "shed_counted_as_failures": shed > 0 and oev.n_failed >= shed,
+        "attainment_reflects_shedding": oev.attainment < 1.0,
+        "pool_drained": osrv.scheduler.alloc.n_free == pc.n_blocks,
+    }
+    problems += [f"overload: {k}" for k, ok in over_inv.items()
+                 if not ok]
+    overload = {
+        "resilience": res.to_json(),
+        "offered": n_req,
+        "n_requests": oev.n_requests,
+        "n_failed": oev.n_failed,
+        "failures": dict(oev.failures),
+        "attainment": oev.attainment,
+        "goodput_tok_s": oev.goodput_tok_s,
+        "throughput_tok_s": oev.throughput_tok_s,
+        "degradation_transitions": list(osrv.ladder.transitions),
+        "invariants": over_inv,
+        "obs": obs_subset(osrv),
+    }
+    rows.append((
+        "fleet/chaos/overload", 0.0,
+        f"att={oev.attainment:.2f} shed={shed} "
+        f"failed={oev.n_failed}/{n_req} "
+        f"goodput={oev.goodput_tok_s:.0f}tok/s"))
+
+    if problems:
+        raise RuntimeError(
+            "chaos invariants violated: " + "; ".join(problems))
+
+    chaos = {
+        "seed": CHAOS_SEED,
+        "n_requests": n_req,
+        "concurrency": C,
+        "slo": slo.to_json(),
+        "baseline": {"duration_s": base_rep.duration_s,
+                     "ttft_p50_s": base_st["ttft_p50_s"],
+                     "tpot_p50_s": base_st["tpot_p50_s"]},
+        "classes": classes,
+        "overload": overload,
+    }
+    return rows, chaos
 
 
 def _bench(quick: bool = True):
@@ -253,12 +440,17 @@ def _bench(quick: bool = True):
 
 def run(quick: bool = True):
     """benchmarks.run driver entry: rows only."""
-    return _bench(quick)[0]
+    return run_results(quick)[0]
 
 
 def run_results(quick: bool = True):
-    """benchmarks.run --out entry: (rows, results) for BENCH_fleet.json."""
-    return _bench(quick)
+    """benchmarks.run --out entry: (rows, results) for BENCH_fleet.json.
+    The envelope carries the saturation sweep plus the chaos scenario
+    (``results["chaos"]``: per-fault-class SLO + invariant verdicts)."""
+    rows, results = _bench(quick)
+    crows, chaos = _chaos_bench(quick)
+    results["chaos"] = chaos
+    return rows + crows, results
 
 
 def write_sweep_csv(results: dict, path: str) -> str:
@@ -288,16 +480,24 @@ def main():
     ap.add_argument("--out", default=None, help="write JSON results here")
     ap.add_argument("--csv", default=None,
                     help="write the per-rate sweep CSV here")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the chaos/resilience scenario "
+                         "(per-fault-class SLO + invariant asserts; "
+                         "the CI chaos-job smoke)")
     args = ap.parse_args()
     t0 = time.time()
-    rows, results = _bench(quick=not args.full)
+    if args.chaos:
+        rows, chaos = _chaos_bench(quick=not args.full)
+        results = {"chaos": chaos}
+    else:
+        rows, results = _bench(quick=not args.full)
     print("name,us_per_call,derived")
     emit(rows)
     print(f"# bench_fleet done in {time.time()-t0:.1f}s")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
-    if args.csv:
+    if args.csv and not args.chaos:
         write_sweep_csv(results, args.csv)
 
 

@@ -45,7 +45,7 @@ OBS_PREFIXES = {
     "bench_compression": ("repro_compress_",),
     "bench_plan": ("repro_compress_", "repro_plan_"),
     "bench_serving": ("repro_serving_",),
-    "bench_fleet": ("repro_serving_", "repro_slo_"),
+    "bench_fleet": ("repro_serving_", "repro_slo_", "repro_chaos_"),
 }
 
 # Envelope contract for the checked-in BENCH_*.json artifacts. Bump on

@@ -33,8 +33,9 @@ import os
 import re
 import shutil
 import threading
+import time
 import zlib
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,9 +124,15 @@ def load_tree_template(path: str) -> Any:
 class CheckpointManager:
     """Manages the checkpoint directory for one training run."""
 
-    def __init__(self, directory: str, keep_n: Optional[int] = None):
+    def __init__(self, directory: str, keep_n: Optional[int] = None,
+                 retries: int = 0, backoff_s: float = 0.05):
         self.directory = directory
         self.keep_n = keep_n
+        self.retries = retries
+        self.backoff_s = backoff_s
+        #: test/chaos hook: called with the attempt index at the start of
+        #: every write attempt; raising OSError simulates transient IO
+        self.fault_hook: Optional[Callable[[int], None]] = None
         self._thread: Optional[threading.Thread] = None
         self._save_error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
@@ -182,7 +189,7 @@ class CheckpointManager:
         leaves = jax.tree.leaves(tree)
         host = [_to_host(l) for l in leaves]
         if blocking:
-            self._write(step, host)
+            self._write_retrying(step, host)
             return
         self._thread = threading.Thread(
             target=self._write_guarded, args=(step, host), daemon=True)
@@ -190,9 +197,25 @@ class CheckpointManager:
 
     def _write_guarded(self, step, host):
         try:
-            self._write(step, host)
-        except BaseException as e:  # surfaced by the next wait()
+            self._write_retrying(step, host)
+        except BaseException as e:  # surfaced by the next wait()/save()
             self._save_error = e
+
+    def _write_retrying(self, step, host) -> None:
+        """``_write`` with up to ``retries`` extra attempts on transient
+        OSError, backed off exponentially (``backoff_s * 2**attempt``).
+        The final failure propagates: immediately for a blocking save,
+        on the next ``wait()``/``save()`` for an async one."""
+        for attempt in range(self.retries + 1):
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(attempt)
+                self._write(step, host)
+                return
+            except OSError:
+                if attempt >= self.retries:
+                    raise
+                time.sleep(self.backoff_s * (2 ** attempt))
 
     def _write(self, step: int, host) -> None:
         final = os.path.join(self.directory, _step_dirname(step))

@@ -157,6 +157,31 @@ def main(argv=None):
                          "SLO attainment + goodput after the run")
     ap.add_argument("--slo-tpot-ms", type=float, default=0.0,
                     help="TPOT target (ms) for the SLO evaluation")
+    # resilience (repro.serving.resilience) + chaos (repro.testing.chaos)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue (0: unbounded); a "
+                         "full queue applies --overload-policy")
+    ap.add_argument("--overload-policy", default="reject",
+                    choices=["reject", "shed-oldest", "priority"],
+                    help="what a full admission queue does: reject the "
+                         "newcomer, shed the oldest queued request, or "
+                         "shed the lowest priority class")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="total per-request deadline (ms from arrival); "
+                         "expired requests are cancelled with their pool "
+                         "blocks freed (0: none)")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=0.0,
+                    help="TTFT deadline (ms from arrival); a request "
+                         "whose first token cannot arrive in time is "
+                         "cancelled (0: none)")
+    ap.add_argument("--watchdog-s", type=float, default=0.0,
+                    help="wall-clock bound per engine step; an over-"
+                         "budget step raises ServerWedged with a "
+                         "diagnostic snapshot (0: off)")
+    ap.add_argument("--chaos", default=None, metavar="PLAN.json",
+                    help="inject a seeded FaultPlan (repro.testing.chaos "
+                         "JSON spec) into the serve run; the fault event "
+                         "log is written to --obs-out/chaos_events.jsonl")
     # observability (repro.obs)
     ap.add_argument("--obs", action="store_true",
                     help="route serving metrics through the process-wide "
@@ -268,6 +293,17 @@ def main(argv=None):
         import dataclasses
         draft_pc = dataclasses.replace(pc, cur_kv=True,
                                        kv_rank=args.draft_kv_rank)
+    from repro.serving import ResilienceConfig
+    res = ResilienceConfig(
+        max_queue=args.max_queue, overload_policy=args.overload_policy,
+        ttft_deadline_s=args.ttft_deadline_ms / 1e3,
+        deadline_s=args.deadline_ms / 1e3, watchdog_s=args.watchdog_s)
+    chaos = None
+    if args.chaos:
+        from repro.testing import ChaosEngine, FaultPlan
+        chaos = ChaosEngine(FaultPlan.load(args.chaos))
+        print(f"chaos: {len(chaos.plan.faults)} fault streams "
+              f"(seed {chaos.plan.seed}) from {args.chaos}")
     server = Server(params, cfg, pc,
                     max_concurrency=args.max_concurrency,
                     draft_params=draft_params, draft_cfg=draft_cfg,
@@ -276,7 +312,7 @@ def main(argv=None):
                     # with --obs the server records straight into the
                     # process-wide registry, so one export carries both
                     obs=obs.default_registry() if args.obs else None,
-                    tracer=tracer)
+                    tracer=tracer, resilience=res, chaos=chaos)
     from repro.attention import use_paged_kernel
     print(f"serving {args.n_requests} requests "
           f"(concurrency {args.max_concurrency}, block {args.block_size}, "
@@ -288,6 +324,18 @@ def main(argv=None):
     with prof.scope("serve"):
         finished, stats = run_continuous(server, workload,
                                          temperature=args.temperature)
+    if chaos is not None:
+        # close any open fault windows (held pool squeezes) and finish
+        # whatever the faults displaced, then refresh the report
+        chaos.finish(server)
+        server.drain()
+        stats = server.stats()
+    failed = stats.get("failed", {})
+    if any(failed.values()) or stats.get("degradation_transitions"):
+        print(f"resilience: failed {failed} | degradation level "
+              f"{stats['degradation_level']} "
+              f"({stats['degradation_transitions']} transitions) | "
+              f"step faults {stats['step_faults']}")
     print(f"slo: ttft p50 {stats['ttft_p50_s']*1e3:.0f}ms "
           f"p99 {stats['ttft_p99_s']*1e3:.0f}ms | tpot "
           f"p50 {stats['tpot_p50_s']*1e3:.1f}ms "
@@ -323,6 +371,11 @@ def main(argv=None):
     print(f"request 0: {len(first.out_tokens)} tokens "
           f"{first.out_tokens[:8]}{'...' if len(first.out_tokens) > 8 else ''}")
 
+    if chaos is not None and chaos.events:
+        os.makedirs(args.obs_out, exist_ok=True)
+        path = chaos.save_events(
+            os.path.join(args.obs_out, "chaos_events.jsonl"))
+        print(f"  chaos events ({len(chaos.events)}) -> {path}")
     if args.obs or args.trace:
         os.makedirs(args.obs_out, exist_ok=True)
         if args.obs:

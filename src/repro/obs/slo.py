@@ -31,6 +31,12 @@ from repro.obs.metrics import Histogram
 
 DEFAULT_WINDOW = 256
 
+#: terminal ``finish_reason`` values that are failures, not completions.
+#: Mirrors ``repro.serving.resilience.FAILURE_REASONS`` (kept literal
+#: here so obs never imports the serving stack). A failed request counts
+#: against attainment — shedding load must never flatter the denominator.
+FAILURE_REASONS = ("rejected", "shed", "timeout", "cancelled")
+
 
 def _pctl(xs: List[float], p: float) -> float:
     """Nearest-rank percentile (matches ``Histogram.percentile``)."""
@@ -87,6 +93,8 @@ class SLOReport:
     spec: SLOSpec
     n_requests: int = 0
     n_meeting: int = 0
+    n_failed: int = 0
+    failures: Dict[str, int] = dataclasses.field(default_factory=dict)
     attainment: float = 0.0
     met: bool = False
     tokens_total: int = 0
@@ -116,6 +124,17 @@ def evaluate(requests: Iterable, spec: SLOSpec,
     ttfts: List[float] = []
     tpots: List[float] = []
     for req in requests:
+        reason = getattr(req, "finish_reason", None)
+        if reason in FAILURE_REASONS:
+            # failure-status check comes FIRST: a timed-out request may
+            # have a recorded TTFT, but it stays a failure — it counts in
+            # the denominator and never meets. Its partial tokens count
+            # toward throughput (they were generated), never goodput.
+            rep.n_requests += 1
+            rep.n_failed += 1
+            rep.failures[reason] = rep.failures.get(reason, 0) + 1
+            rep.tokens_total += len(getattr(req, "out_tokens", ()))
+            continue
         m = request_metrics(req)
         if m is None:
             continue
@@ -165,6 +184,8 @@ class SLOMonitor:
         self._meets: deque = deque(maxlen=window)
         self.n_requests = 0
         self.n_meeting = 0
+        self.n_failed = 0
+        self.failures: Dict[str, int] = {}
         self.tokens_total = 0
         self.tokens_meeting = 0
 
@@ -182,20 +203,41 @@ class SLOMonitor:
             self.tokens_meeting += n_tokens
         return ok
 
+    def observe_failure(self, reason: str, n_tokens: int = 0) -> bool:
+        """Record a shed/rejected/timed-out/cancelled request: it enters
+        the attainment denominator (window and cumulative) as a miss; no
+        latency sample is taken (the latency is censored, not zero)."""
+        self._meets.append((False, n_tokens))
+        self.n_requests += 1
+        self.n_failed += 1
+        self.failures[reason] = self.failures.get(reason, 0) + 1
+        self.tokens_total += n_tokens
+        return False
+
     def observe_request(self, req) -> Optional[bool]:
+        reason = getattr(req, "finish_reason", None)
+        if reason in FAILURE_REASONS:
+            return self.observe_failure(
+                reason, len(getattr(req, "out_tokens", ())))
         m = request_metrics(req)
         if m is None:
             return None
         return self.observe(m["ttft_s"], m["tpot_s"], m["n_tokens"])
 
-    def report(self) -> dict:
+    def report(self, elapsed_s: Optional[float] = None) -> dict:
+        """Windowed + cumulative SLO view. With ``elapsed_s`` the report
+        adds goodput-under-shedding: tokens of SLO-meeting requests per
+        second of wall time — the rate the shed/failed traffic can never
+        inflate."""
         win = list(self._meets)
         n_win = len(win)
         meet_win = sum(1 for ok, _ in win if ok)
-        return {
+        out = {
             "spec": self.spec.to_json(),
             "window": self.window,
             "n_requests": self.n_requests,
+            "n_failed": self.n_failed,
+            "failures": dict(self.failures),
             "attainment": (self.n_meeting / self.n_requests
                            if self.n_requests else 0.0),
             "attainment_window": meet_win / n_win if n_win else 0.0,
@@ -208,6 +250,10 @@ class SLOMonitor:
             "tpot_p50_s": self._h_tpot.percentile(50),
             "tpot_p99_s": self._h_tpot.percentile(99),
         }
+        if elapsed_s is not None and elapsed_s > 0:
+            out["throughput_tok_s"] = self.tokens_total / elapsed_s
+            out["goodput_tok_s"] = self.tokens_meeting / elapsed_s
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -7,17 +7,25 @@ Layered as:
           paged_cache       block-table paged KV pool (+ CUR-KV mode)
           runtime           paged prefill / decode model steps
           sampling          vectorized per-request token sampling
+      resilience            bounded admission, deadlines, degradation
+                            ladder, watchdog (survival under pressure)
 """
 from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.resilience import (
+    DegradationLadder, QueueFull, ResilienceConfig, ServerWedged)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.server import Server
 
 __all__ = [
     "BlockAllocator",
+    "DegradationLadder",
     "PagedConfig",
+    "QueueFull",
     "Request",
+    "ResilienceConfig",
     "SamplingParams",
     "Scheduler",
     "Server",
+    "ServerWedged",
 ]

@@ -76,6 +76,7 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._ref: Dict[int, int] = {}
+        self._squeezed: List[int] = []  # chaos-held blocks (see squeeze)
         self.blocks_freed_window = 0   # lifetime out-of-window frees
         if obs is None:
             from repro.obs.metrics import NULL
@@ -191,6 +192,26 @@ class BlockAllocator:
             self.blocks_freed_window += len(freed)
             self._m_window.inc(len(freed))
         return len(freed)
+
+    # -- chaos hook ----------------------------------------------------
+    def squeeze(self, n: int) -> int:
+        """Take up to ``n`` free blocks out of circulation (fault
+        injection: a co-tenant eating pool capacity). Squeezed blocks
+        are invisible to ``alloc`` until :meth:`release_squeeze`; they
+        count as used so pressure signals see the squeeze. Returns the
+        number actually taken."""
+        take = self.alloc(min(n, len(self._free)))
+        if not take:
+            return 0
+        self._squeezed.extend(take)
+        return len(take)
+
+    def release_squeeze(self) -> int:
+        """Return every squeezed block to the pool."""
+        held, self._squeezed = self._squeezed, []
+        if held:
+            self.free(held)
+        return len(held)
 
     def copy_on_write(self, block: int) -> Optional[int]:
         """Before writing a shared block: returns a fresh private block to

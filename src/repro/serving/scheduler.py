@@ -35,6 +35,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.resilience import OVERLOAD_POLICIES, QueueFull
 from repro.serving.sampling import SamplingParams
 
 
@@ -47,12 +48,15 @@ class Request:
         default_factory=SamplingParams)
     eos_id: Optional[int] = None
     arrival: float = 0.0
+    priority: int = 0                     # higher = shed later
+    ttft_deadline_s: Optional[float] = None   # relative to arrival
+    deadline_s: Optional[float] = None        # relative to arrival
     # --- filled by the runtime ---------------------------------------
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     out_logprobs: List[float] = dataclasses.field(default_factory=list)
     ttft: Optional[float] = None          # first-token latency (s)
     finish_time: Optional[float] = None
-    finish_reason: Optional[str] = None   # "eos" | "length"
+    finish_reason: Optional[str] = None   # "eos"|"length"|failure status
     n_preempted: int = 0
 
     @property
@@ -88,10 +92,16 @@ class Plan:
 
 class Scheduler:
     def __init__(self, pc: PagedConfig, max_concurrency: int, obs=None,
-                 tracer=None, window: int = 0):
+                 tracer=None, window: int = 0, max_queue: int = 0,
+                 overload_policy: str = "reject"):
+        if overload_policy not in OVERLOAD_POLICIES:
+            raise ValueError(f"overload_policy {overload_policy!r} not "
+                             f"in {OVERLOAD_POLICIES}")
         self.pc = pc
         self.max_concurrency = max_concurrency
         self.window = window          # 0 = no eviction (full context)
+        self.max_queue = max_queue    # 0 = unbounded (legacy)
+        self.overload_policy = overload_policy
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Slot]] = [None] * max_concurrency
         self.alloc = BlockAllocator(pc.n_blocks, obs=obs)
@@ -120,7 +130,16 @@ class Scheduler:
         return not self.queue and not self.active_slots
 
     # -- admission -----------------------------------------------------
-    def add(self, req: Request) -> None:
+    def add(self, req: Request) -> List[Request]:
+        """Enqueue ``req``. With a bounded queue (``max_queue > 0``) at
+        capacity, the overload policy decides: ``reject`` raises
+        :class:`QueueFull`; ``shed-oldest`` drops the oldest queued
+        request; ``priority`` drops the oldest lowest-priority queued
+        request, or raises QueueFull when the newcomer itself is the
+        lowest class. Returns the shed victims (callers finalize them
+        with a terminal ``"shed"`` status). Preempted requests rejoin
+        via ``appendleft`` without passing through this gate — they
+        already hold admission."""
         need = self.pc.blocks_for(len(req.prompt) + req.max_new_tokens)
         if need > self.pc.n_blocks or need > self.pc.max_blocks_per_seq:
             raise ValueError(
@@ -128,7 +147,49 @@ class Scheduler:
                 f" tokens exceed the pool "
                 f"({self.pc.n_blocks}x{self.pc.block_size} blocks, "
                 f"table width {self.pc.max_blocks_per_seq})")
+        victims: List[Request] = []
+        while self.max_queue > 0 and len(self.queue) >= self.max_queue:
+            victim = self._overload_victim(req)
+            if victim is None:
+                raise QueueFull(req.rid, len(self.queue), self.max_queue)
+            self.queue.remove(victim)
+            victims.append(victim)
         self.queue.append(req)
+        return victims
+
+    def _overload_victim(self, incoming: Request) -> Optional[Request]:
+        """Who a full queue sheds to admit ``incoming`` — None means
+        nobody (reject the newcomer instead)."""
+        if self.overload_policy == "reject" or not self.queue:
+            return None
+        if self.overload_policy == "shed-oldest":
+            return self.queue[0]
+        # priority: oldest of the lowest class, only if strictly below
+        # the newcomer (equal-class arrivals are FIFO: newcomer loses)
+        victim = min(self.queue, key=lambda r: r.priority)
+        return victim if victim.priority < incoming.priority else None
+
+    def drop_queued(self, pred) -> List[Request]:
+        """Remove every queued request matching ``pred`` (deadline
+        expiry, pressure shedding). Active slots are untouched."""
+        dropped = [r for r in self.queue if pred(r)]
+        if dropped:
+            self.queue = deque(r for r in self.queue if not pred(r))
+        return dropped
+
+    def rollback_admission(self,
+                           admitted: List[Tuple[int, Request]]) -> None:
+        """Undo ``_try_admit`` after a failed prefill (e.g. an injected
+        transient fault): free each slot's blocks and put the requests
+        back at the queue front in their original order, so the retried
+        step re-admits and re-prefills them bit-exactly."""
+        for slot_id, req in reversed(admitted):
+            slot = self.slots[slot_id]
+            if slot is None or slot.req is not req:
+                continue
+            self.alloc.free(self._live(slot.blocks))
+            self.slots[slot_id] = None
+            self.queue.appendleft(req)
 
     def _prefill_len(self, req: Request) -> int:
         """Tokens to materialize on (re-)admission: prompt plus all
@@ -136,23 +197,33 @@ class Scheduler:
         input, exactly as if the request was never preempted)."""
         return len(req.prompt) + max(0, len(req.out_tokens) - 1)
 
+    def admission_blocks_needed(self, req: Request) -> int:
+        """Pool blocks admission would have to allocate for ``req``: the
+        prefill length plus one decode-headroom token, minus the dead
+        window prefix (window mode never materializes it — its
+        write_prompt scatters drop on the -1 holes and decode can never
+        attend it; prefill attention itself runs on in-flight K/V, not
+        the pool)."""
+        n_pre = self._prefill_len(req)
+        need = self.pc.blocks_for(n_pre + 1)
+        first_live = 0
+        if self.window > 0:
+            first_live = max(0, n_pre - self.window + 1) \
+                // self.pc.block_size
+        return need - first_live
+
     def _try_admit(self) -> List[Tuple[int, Request]]:
         admitted = []
         free_slots = [i for i, s in enumerate(self.slots) if s is None]
         while self.queue and free_slots:
             req = self.queue[0]
             n_pre = self._prefill_len(req)
-            # +1 headroom so the first decode write always has a slot
-            need = self.pc.blocks_for(n_pre + 1)
-            # window mode: the prompt's dead prefix never needs pool
-            # blocks — its write_prompt scatters drop on the -1 holes and
-            # decode can never attend it (prefill attention itself runs
-            # on in-flight K/V, not the pool)
             first_live = 0
             if self.window > 0:
                 first_live = max(0, n_pre - self.window + 1) \
                     // self.pc.block_size
-            blocks = self.alloc.alloc(need - first_live)
+            blocks = self.alloc.alloc(
+                self.admission_blocks_needed(req))
             if blocks is None:
                 break
             self.queue.popleft()

@@ -26,10 +26,14 @@ from repro.obs.trace import (
 from repro.serving import paged_cache as pcache
 from repro.serving import runtime
 from repro.serving import speculative
+from repro.serving.resilience import (
+    FAILURE_REASONS, DegradationLadder, QueueFull, ResilienceConfig,
+    ServerWedged, deadline_expired, pressure_signals, ttft_missed)
 from repro.serving.sampling import (
     SamplingParams, batch_base_keys, batch_request_keys, greedy_tokens,
     pack_params, sample_tokens)
 from repro.serving.scheduler import Request, Scheduler
+from repro.testing.chaos import InjectedFault
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -192,12 +196,15 @@ class Server:
                  draft_pc: Optional[pcache.PagedConfig] = None,
                  spec_k: int = 0,
                  obs: Optional[Registry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 chaos=None):
         runtime.check_supported(cfg)
         self.params = params
         self.cfg = cfg
         self.pc = pc or pcache.PagedConfig()
         self.mesh = mesh
+        self.res = resilience or ResilienceConfig()
         # each Server owns an always-enabled registry (stats() derives
         # from its snapshot; concurrent Servers never share counters);
         # pass one in to aggregate across servers or export centrally
@@ -215,7 +222,14 @@ class Server:
             window = max(window, dw) if (window and dw) else 0
         self.window = window
         self.scheduler = Scheduler(self.pc, max_concurrency, obs=self.obs,
-                                   tracer=self.tracer, window=window)
+                                   tracer=self.tracer, window=window,
+                                   max_queue=self.res.max_queue,
+                                   overload_policy=self.res.overload_policy)
+        self.ladder = DegradationLadder(self.res, obs=self.obs,
+                                        tracer=self.tracer)
+        self.chaos = chaos
+        if chaos is not None:
+            chaos.bind(obs=self.obs, tracer=self.tracer)
         self.cache = pcache.init_paged_cache(cfg, self.pc)
         if calib_tokens is None:
             calib_tokens = jax.random.randint(
@@ -272,7 +286,16 @@ class Server:
         # stats live on the obs registry; the former counter attributes
         # (tokens_generated, n_decode_steps, ...) are properties below
         self._t_start: Optional[float] = None
+        self._step_idx = 0
+        self._step_t0: Optional[float] = None   # last step start
+        self._step_t1: Optional[float] = None   # last step end
         m = self.obs
+        self._c_failed = m.counter(
+            "repro_serving_requests_failed_total",
+            "requests ending in a failure status", labels=("reason",))
+        self._c_step_faults = m.counter(
+            "repro_serving_step_faults_total",
+            "engine steps aborted by a transient (injected) fault")
         self._c_tokens = m.counter(
             "repro_serving_tokens_generated_total", "tokens emitted")
         self._c_completed = m.counter(
@@ -396,20 +419,108 @@ class Server:
     def submit(self, prompt, max_new_tokens: int,
                sampling: Optional[SamplingParams] = None,
                eos_id: Optional[int] = None,
-               arrival: Optional[float] = None) -> int:
+               arrival: Optional[float] = None,
+               priority: int = 0,
+               ttft_deadline_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue a request; always returns its rid. A request turned
+        away by bounded admission still gets the rid — it lands in
+        ``finished`` with status ``"rejected"`` (and any request shed to
+        make room lands there as ``"shed"``), so callers and SLO
+        evaluation see every outcome. Per-request deadlines default to
+        the server's :class:`ResilienceConfig`."""
         rid = self._next_rid
         self._next_rid += 1
+        if ttft_deadline_s is None:
+            ttft_deadline_s = self.res.ttft_deadline_s or None
+        if deadline_s is None:
+            deadline_s = self.res.deadline_s or None
         req = Request(
             rid=rid, prompt=[int(t) for t in prompt],
             max_new_tokens=max_new_tokens,
             sampling=sampling or SamplingParams(), eos_id=eos_id,
-            arrival=time.perf_counter() if arrival is None else arrival)
-        self.scheduler.add(req)
+            arrival=time.perf_counter() if arrival is None else arrival,
+            priority=priority, ttft_deadline_s=ttft_deadline_s,
+            deadline_s=deadline_s)
+        try:
+            victims = self.scheduler.add(req)
+        except QueueFull:
+            self._finalize(req, "rejected", time.perf_counter())
+            return rid
+        now = time.perf_counter()
+        for v in victims:
+            self._finalize(v, "shed", now)
         if self.tracer.enabled:
             self.tracer.name_track(request_track(rid), f"req {rid}")
             self.tracer.event("queued", track=request_track(rid),
                               rid=rid, prompt_len=len(req.prompt))
         return rid
+
+    def _finalize(self, req: Request, reason: str, now: float) -> None:
+        """Terminal failure status for a request not (or no longer)
+        holding a slot: rejected / shed / timeout / cancelled."""
+        req.finish_reason = reason
+        req.finish_time = now
+        self.finished[req.rid] = req
+        self._c_failed.labels(reason=reason).inc()
+        if self.tracer.enabled:
+            self.tracer.add_span(
+                "request", req.arrival, max(0.0, now - req.arrival),
+                track=request_track(req.rid),
+                attrs={"rid": req.rid, "reason": reason,
+                       "tokens": len(req.out_tokens)})
+
+    def cancel(self, rid: int) -> bool:
+        """True cancellation: a queued request is dropped, a running one
+        is retired with its pool blocks freed. Returns False when the
+        rid is unknown or already finished."""
+        now = time.perf_counter()
+        dropped = self.scheduler.drop_queued(lambda r: r.rid == rid)
+        if dropped:
+            self._finalize(dropped[0], "cancelled", now)
+            return True
+        for i in list(self.scheduler.active_slots):
+            if self.scheduler.slots[i].req.rid == rid:
+                req = self.scheduler.retire(i)
+                self._finalize(req, "cancelled", now)
+                return True
+        return False
+
+    def health(self) -> dict:
+        """Liveness/readiness probe. *Live* fails only when a step has
+        been running past the watchdog bound (observed from another
+        thread; the stepping thread itself raises ServerWedged). *Ready*
+        additionally requires admission headroom and a degradation
+        level below shed."""
+        now = time.perf_counter()
+        reasons = []
+        wd = self.res.watchdog_s
+        in_step = (self._step_t0 is not None
+                   and (self._step_t1 is None
+                        or self._step_t1 < self._step_t0))
+        live = True
+        if wd and in_step and now - self._step_t0 > wd:
+            live = False
+            reasons.append(
+                f"step running {now - self._step_t0:.3f}s > "
+                f"watchdog_s={wd}")
+        ready = live
+        depth = self.scheduler.queue_depth
+        if self.res.max_queue and depth >= self.res.max_queue:
+            ready = False
+            reasons.append("admission queue full")
+        if self.ladder.shed_active:
+            ready = False
+            reasons.append("degradation ladder at shed")
+        return {
+            "live": live, "ready": ready, "reasons": reasons,
+            "degradation_level": self.ladder.level,
+            "queue_depth": depth,
+            "pool_blocks_free": self.scheduler.alloc.n_free,
+            "pool_blocks_total": self.pc.n_blocks,
+            "last_step_age_s": (None if self._step_t1 is None
+                                else now - self._step_t1),
+        }
 
     @property
     def idle(self) -> bool:
@@ -491,6 +602,10 @@ class Server:
                        "preempted": req.n_preempted})
 
     def _run_prefill(self, admitted, now: float) -> None:
+        if self.chaos is not None:
+            # fires BEFORE any cache/pool mutation — step() rolls the
+            # admissions back and the retried step re-prefills bit-exactly
+            self.chaos.site("prefill", self._step_idx)
         sched = self.scheduler
         B = sched.max_concurrency
         lengths = np.zeros((B,), np.int32)
@@ -686,14 +801,23 @@ class Server:
         return True
 
     def _run_decode(self, now: float) -> None:
+        if self.chaos is not None:
+            # first line: an injected decode fault leaves every slot,
+            # block list and cache untouched, so the step just retries
+            self.chaos.site("decode", self._step_idx)
         sched = self.scheduler
         # drop out-of-window blocks BEFORE forking/reserving: the spec
         # fork path never calls ensure_decode_blocks, and freed blocks
         # raise the odds the fork finds a pool slot
         sched.evict_out_of_window()
-        if self.spec_k and self._run_spec_decode():
+        # ladder step 1: speculation off under pressure (the draft/verify
+        # window forks blocks the strained pool cannot spare)
+        if (self.spec_k and self.ladder.spec_allowed
+                and self._run_spec_decode()):
             return
-        k = self._decode_window()
+        # ladder step 2: shrink the multi-token scan window so each step
+        # commits less and reacts to pressure/deadlines sooner
+        k = self.ladder.decode_window_cap(self._decode_window())
         remaining = {i: sched.slots[i].req.max_new_tokens
                      - len(sched.slots[i].req.out_tokens)
                      for i in sched.active_slots}
@@ -750,16 +874,93 @@ class Server:
             self._maybe_retire(i, t_now)
         self._c_decode_steps.inc(k)
 
+    # -- resilience passes (run inside step) ---------------------------
+    def _expire_queued(self, now: float) -> None:
+        """Admission-time deadline check: a queued request past its TTFT
+        or total deadline can never be served usefully — drop it before
+        it costs a prefill."""
+        for req in self.scheduler.drop_queued(
+                lambda r: deadline_expired(r, now) is not None):
+            self._finalize(req, "timeout", now)
+
+    def _enforce_deadlines(self, now: float) -> None:
+        """Post-prefill / post-decode-window check on running slots:
+        cancel (freeing pool blocks) any request past its total deadline
+        or whose first token arrived after its TTFT deadline."""
+        sched = self.scheduler
+        for i in list(sched.active_slots):
+            req = sched.slots[i].req
+            if deadline_expired(req, now) or ttft_missed(req):
+                sched.retire(i)
+                self._finalize(req, "timeout", now)
+
+    def _shed_for_pressure(self, now: float) -> None:
+        """Ladder step 3: drop queued requests (per the overload policy)
+        until queue pressure falls back under the shed rung's hysteresis
+        exit — the controlled alternative to serving everyone late."""
+        sched = self.scheduler
+        while sched.queue:
+            pr = pressure_signals(sched, self.res.max_queue,
+                                  sched.max_concurrency)
+            if pr["queue"] < self.ladder.shed_exit_pressure:
+                break
+            if self.res.overload_policy == "priority":
+                victim = min(sched.queue,
+                             key=lambda r: (r.priority, r.arrival))
+                sched.queue.remove(victim)
+            else:
+                victim = sched.queue.popleft()   # shed-oldest
+            self._finalize(victim, "shed", now)
+
+    def _watchdog(self, t0: float, kind: str) -> None:
+        """Wall-clock bound per engine step: a wedged device call or
+        pathological host loop surfaces as a typed ServerWedged with a
+        diagnostic snapshot instead of a silent hang."""
+        self._step_t1 = time.perf_counter()
+        wd = self.res.watchdog_s
+        dur = self._step_t1 - t0
+        if wd and dur > wd:
+            raise ServerWedged(
+                f"engine step {self._step_idx} ({kind}) took {dur:.3f}s "
+                f"> watchdog_s={wd}",
+                {"step": self._step_idx, "kind": kind,
+                 "duration_s": dur, "watchdog_s": wd,
+                 "queue_depth": self.scheduler.queue_depth,
+                 "active_slots": len(self.scheduler.active_slots),
+                 "pool_blocks_free": self.scheduler.alloc.n_free,
+                 "pool_blocks_total": self.pc.n_blocks,
+                 "degradation_level": self.ladder.level})
+
     def step(self) -> bool:
-        """One engine iteration. Returns False when nothing was runnable."""
+        """One engine iteration. Returns False when nothing was runnable
+        (chaos/deadline/ladder passes still run on such steps, so squeeze
+        windows close and queued requests keep expiring)."""
         now = time.perf_counter()
         if self._t_start is None:
             self._t_start = now
+        self._step_idx += 1
+        self._step_t0 = now
+        if self.chaos is not None:
+            self.chaos.on_step(self, self._step_idx)
         self._h_queue_depth.observe(self.scheduler.queue_depth)
+        # resilience passes run before planning: expired or shed requests
+        # must never cost a prefill
+        self._expire_queued(now)
+        pr = pressure_signals(self.scheduler, self.res.max_queue,
+                              self.scheduler.max_concurrency)
+        self.ladder.update(pr["pressure"], self._step_idx)
+        if self.ladder.shed_active and self.res.overload_policy != "reject":
+            self._shed_for_pressure(now)
         plan = self.scheduler.plan()
         toks_before = self.tokens_generated
         if plan.kind == "prefill":
-            self._run_prefill(plan.prefill, now)
+            try:
+                self._run_prefill(plan.prefill, now)
+            except InjectedFault:
+                self.scheduler.rollback_admission(plan.prefill)
+                self._c_step_faults.inc()
+                self._watchdog(now, "prefill_fault")
+                return True
             dt = time.perf_counter() - now
             n = self.tokens_generated - toks_before
             self._c_prefill_time.inc(dt)
@@ -769,7 +970,15 @@ class Server:
                                  attrs={"admitted": len(plan.prefill),
                                         "tokens": n})
         elif plan.kind == "decode":
-            self._run_decode(now)
+            try:
+                self._run_decode(now)
+            except InjectedFault:
+                # the decode hook fires before any state mutates: slots,
+                # block lists and the cache are exactly as planned, so
+                # the next step retries the same window
+                self._c_step_faults.inc()
+                self._watchdog(now, "decode_fault")
+                return True
             dt = time.perf_counter() - now
             n = self.tokens_generated - toks_before
             self._c_decode_time.inc(dt)
@@ -782,7 +991,10 @@ class Server:
             self.tracer.add_span("decode_window", now, dt,
                                  track=ENGINE_TRACK, attrs={"tokens": n})
         else:
+            self._watchdog(now, "idle")
             return False
+        self._enforce_deadlines(time.perf_counter())
+        self._watchdog(now, plan.kind)
         return True
 
     def drain(self) -> Dict[int, Request]:
@@ -898,4 +1110,14 @@ class Server:
             "spec_verify_time_s": val(
                 "repro_serving_spec_verify_time_s_total"),
             "jit_cache": jit_cache_stats(),
+            # resilience: every failure status, the ladder's position and
+            # history, and the admission bound this server ran with
+            "failed": {r: int(self._c_failed.labels(reason=r).value)
+                       for r in FAILURE_REASONS},
+            "step_faults": int(
+                val("repro_serving_step_faults_total")),
+            "degradation_level": self.ladder.level,
+            "degradation_transitions": len(self.ladder.transitions),
+            "max_queue": self.res.max_queue,
+            "overload_policy": self.res.overload_policy,
         }

@@ -1,0 +1,218 @@
+"""Seeded chaos harness: fault-plan determinism and JSON replay, and
+each fault class injected into the smoke-model server with the
+resilience invariants checked afterwards — the pool drains back to
+full, refcounts conserve, surviving requests' greedy outputs stay
+bit-identical to a fault-free baseline, and the same plan+seed replays
+the identical fault-event sequence."""
+import random
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.serving import PagedConfig, ResilienceConfig, Server
+from repro.testing import ChaosEngine, FaultPlan, FaultSpec
+from repro.testing.chaos import FAULT_KINDS, _fires
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# plan + activation determinism (host-level)
+# ---------------------------------------------------------------------------
+
+def test_unknown_fault_kind_raises():
+    with pytest.raises(ValueError):
+        FaultSpec("cosmic_ray")
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan([FaultSpec("latency_spike", start_step=2,
+                                end_step=9, probability=0.5,
+                                magnitude=0.01),
+                      FaultSpec("queue_storm", n=4)], seed=17)
+    clone = FaultPlan.from_json(plan.to_json())
+    assert clone.seed == 17
+    assert [f.to_json() for f in clone.faults] == \
+        [f.to_json() for f in plan.faults]
+    path = plan.save(str(tmp_path / "plan.json"))
+    assert FaultPlan.load(path).to_json() == plan.to_json()
+
+
+@given(seed=st.integers(0, 10_000), fi=st.integers(0, 4),
+       step=st.integers(0, 500),
+       p=st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=40)
+def test_activation_draw_is_pure(seed, fi, step, p):
+    a = _fires(seed, fi, step, p)
+    assert a == _fires(seed, fi, step, p)       # pure in its inputs
+    assert isinstance(a, bool) or a in (True, False)
+    if p >= 1.0:
+        assert a
+    if p <= 0.0:
+        assert not a
+
+
+def test_activation_independent_of_call_order():
+    draws = [(s, fi, st_) for s in (0, 1) for fi in (0, 1)
+             for st_ in range(20)]
+    fwd = {d: _fires(*d, 0.5) for d in draws}
+    rng = random.Random(3)
+    rng.shuffle(draws)
+    assert all(_fires(*d, 0.5) == fwd[d] for d in draws)
+
+
+# ---------------------------------------------------------------------------
+# fault classes against the smoke-model server
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_smoke("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts(olmo):
+    cfg, _ = olmo
+    rng = np.random.RandomState(0)
+    return [rng.randint(0, cfg.vocab_size, size=n).tolist()
+            for n in (5, 9, 13, 7, 11)]
+
+
+def _chaos_run(olmo, prompts, plan, res=None, C=4, n_new=8):
+    cfg, params = olmo
+    pc = PagedConfig.sized_for(64, C)
+    ch = ChaosEngine(plan) if plan is not None else None
+    srv = Server(params, cfg, pc, max_concurrency=C, resilience=res,
+                 chaos=ch)
+    rids = [srv.submit(p, max_new_tokens=n_new) for p in prompts]
+    srv.drain()
+    if ch is not None:
+        ch.finish(srv)
+        srv.drain()                 # mop up anything a release unblocked
+    return srv, pc, ch, rids
+
+
+@pytest.fixture(scope="module")
+def baseline(olmo, prompts):
+    srv, _pc, _ch, rids = _chaos_run(olmo, prompts, plan=None)
+    return {r: tuple(srv.finished[r].out_tokens) for r in rids}
+
+
+def _assert_invariants(srv, pc, baseline, rids):
+    assert srv.scheduler.alloc.n_free == pc.n_blocks   # pool drained
+    assert not srv.scheduler.alloc._ref                # refcounts conserve
+    for r in rids:
+        req = srv.finished[r]
+        assert req.finish_reason in ("eos", "length"), req.finish_reason
+        assert tuple(req.out_tokens) == baseline[r]    # bit-identical
+
+
+def test_transient_prefill_error_rolls_back_bit_exact(olmo, prompts,
+                                                      baseline):
+    plan = FaultPlan([FaultSpec("transient_error", start_step=1,
+                                end_step=4, site="prefill")], seed=5)
+    srv, pc, ch, rids = _chaos_run(olmo, prompts, plan)
+    _assert_invariants(srv, pc, baseline, rids)
+    assert srv.stats()["step_faults"] >= 1
+    assert all(e["kind"] == "transient_error" for e in ch.event_log())
+
+
+def test_transient_decode_error_is_retried(olmo, prompts, baseline):
+    plan = FaultPlan([FaultSpec("transient_error", start_step=3,
+                                end_step=20, probability=0.5,
+                                site="decode")], seed=9)
+    srv, pc, ch, rids = _chaos_run(olmo, prompts, plan)
+    _assert_invariants(srv, pc, baseline, rids)
+
+
+def test_pool_squeeze_releases_and_recovers(olmo, prompts, baseline):
+    plan = FaultPlan([FaultSpec("pool_squeeze", start_step=2,
+                                end_step=10, magnitude=0.5)], seed=7)
+    srv, pc, ch, rids = _chaos_run(olmo, prompts, plan)
+    _assert_invariants(srv, pc, baseline, rids)
+    kinds = {e["kind"] for e in ch.event_log()}
+    assert kinds == {"pool_squeeze"}
+
+
+def test_queue_storm_bounded_admission_shields_originals(olmo, prompts,
+                                                         baseline):
+    plan = FaultPlan([FaultSpec("queue_storm", start_step=2, end_step=4,
+                                n=6)], seed=3)
+    res = ResilienceConfig(max_queue=len(prompts))
+    srv, pc, ch, rids = _chaos_run(olmo, prompts, plan, res=res)
+    _assert_invariants(srv, pc, baseline, rids)
+    storm_rids = set(srv.finished) - set(rids)
+    assert storm_rids                   # the storm actually arrived
+    rejected = [r for r in storm_rids
+                if srv.finished[r].finish_reason == "rejected"]
+    events = [e for e in ch.event_log() if e["kind"] == "queue_storm"]
+    assert events and all(e["detail"]["offered"] == 6 for e in events)
+    # bounded admission turned at least part of the storm away
+    assert srv.stats()["failed"]["rejected"] == len(rejected)
+
+
+def test_multi_fault_plan_replays_identically(olmo, prompts, baseline):
+    plan = FaultPlan([
+        FaultSpec("latency_spike", start_step=2, end_step=5,
+                  probability=0.5, magnitude=0.001),
+        FaultSpec("transient_error", start_step=1, end_step=10,
+                  probability=0.5),
+        FaultSpec("pool_squeeze", start_step=4, end_step=9,
+                  magnitude=0.5),
+        FaultSpec("queue_storm", start_step=5, end_step=6, n=3),
+    ], seed=11)
+    srv1, pc, ch1, rids = _chaos_run(olmo, prompts, plan)
+    _assert_invariants(srv1, pc, baseline, rids)
+    # replay from the serialized plan: identical fault-event sequence
+    srv2, _pc, ch2, _rids = _chaos_run(
+        olmo, prompts, FaultPlan.from_json(plan.to_json()))
+    assert ch1.event_log() == ch2.event_log()
+    assert ch1.event_log()                      # and it was non-trivial
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=5)
+def test_random_plans_never_leak(seed):
+    """Property sweep over random plans on a tiny pool: whatever the
+    plan does, chaos bookkeeping must hand every squeezed block back."""
+    from repro.serving.paged_cache import BlockAllocator
+
+    class _FakeSched:
+        def __init__(self, alloc):
+            self.alloc = alloc
+
+    class _FakeServer:
+        def __init__(self, alloc):
+            self.scheduler = _FakeSched(alloc)
+
+    rng = random.Random(seed)
+    faults = [FaultSpec("pool_squeeze",
+                        start_step=rng.randrange(0, 10),
+                        end_step=rng.randrange(10, 20),
+                        magnitude=rng.choice([0.0, 0.3, 0.9]),
+                        n=rng.randrange(1, 6))
+              for _ in range(rng.randrange(1, 4))]
+    alloc = BlockAllocator(16)
+    fake = _FakeServer(alloc)
+    ch = ChaosEngine(FaultPlan(faults, seed=seed))
+    for step in range(25):
+        ch.on_step(fake, step)
+    ch.finish(fake)
+    assert alloc.n_free == 16 and not alloc._ref
+
+
+def test_checkpoint_corruption_hook(tmp_path):
+    from repro.dist.checkpoint import CheckpointManager
+    from repro.testing import corrupt_checkpoint
+    mgr = CheckpointManager(str(tmp_path))
+    t = {"w": jax.numpy.ones((8, 8))}
+    mgr.save(1, t)
+    corrupt_checkpoint(str(tmp_path), 1, mode="bitflip")
+    assert mgr.latest_valid_step() is None      # crc32 rejects it

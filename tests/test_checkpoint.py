@@ -107,6 +107,94 @@ def test_data_pipeline_exact_skip_ahead():
                                   np.asarray(z["labels"][0, :-1]))
 
 
+def test_bitflip_corruption_rejected(tmp_path):
+    from repro.testing import corrupt_checkpoint
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    corrupt_checkpoint(str(tmp_path), 2, mode="bitflip", seed=4)
+    assert mgr.latest_valid_step() == 1       # crc32 catches one flipped bit
+    step, restored = mgr.restore(jax.tree.map(jnp.zeros_like, _tree(0)))
+    assert step == 1 and int(restored["step"]) == 1
+
+
+def test_truncation_corruption_rejected(tmp_path):
+    from repro.testing import corrupt_checkpoint
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    corrupt_checkpoint(str(tmp_path), 3, mode="truncate")
+    corrupt_checkpoint(str(tmp_path), 2, mode="bitflip")
+    # keep-N fallback walks past BOTH corrupt checkpoints
+    assert mgr.latest_valid_step() == 1
+    step, _ = mgr.restore(jax.tree.map(jnp.zeros_like, _tree(0)))
+    assert step == 1
+
+
+def test_blocking_save_retries_transient_io(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retries=2, backoff_s=0.001)
+    attempts = []
+
+    def flaky(attempt):
+        attempts.append(attempt)
+        if attempt < 2:
+            raise OSError("disk hiccup")
+
+    mgr.fault_hook = flaky
+    mgr.save(5, _tree(5))                     # succeeds on 3rd attempt
+    assert attempts == [0, 1, 2]
+    assert mgr.latest_valid_step() == 5
+
+
+def test_blocking_save_exhausts_retries(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retries=1, backoff_s=0.001)
+    mgr.fault_hook = lambda attempt: (_ for _ in ()).throw(
+        OSError("dead disk"))
+    with pytest.raises(OSError):
+        mgr.save(5, _tree(5))
+    assert mgr.latest_valid_step() is None    # nothing half-written
+
+
+def test_async_save_failure_surfaces_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retries=1, backoff_s=0.001)
+    mgr.fault_hook = lambda attempt: (_ for _ in ()).throw(
+        OSError("dead disk"))
+    mgr.save(7, _tree(7), blocking=False)
+    with pytest.raises(OSError):
+        mgr.wait()
+    # the error is consumed: the manager is usable again afterwards
+    mgr.fault_hook = None
+    mgr.save(8, _tree(8))
+    assert mgr.latest_valid_step() == 8
+
+
+def test_async_save_failure_surfaces_on_next_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.fault_hook = lambda attempt: (_ for _ in ()).throw(
+        OSError("dead disk"))
+    mgr.save(7, _tree(7), blocking=False)
+    mgr.fault_hook = None
+    with pytest.raises(OSError):
+        mgr.save(8, _tree(8))                 # wait() inside save re-raises
+    mgr.save(8, _tree(8))
+    assert mgr.latest_valid_step() == 8
+
+
+def test_async_save_retry_recovers(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retries=3, backoff_s=0.001)
+    fails = {"n": 2}
+
+    def flaky(attempt):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+
+    mgr.fault_hook = flaky
+    mgr.save(9, _tree(9), blocking=False)
+    mgr.wait()                                # no raise: retries absorbed it
+    assert mgr.latest_valid_step() == 9
+
+
 def test_straggler_watchdog():
     wd = StragglerWatchdog(threshold=3.0)
     for i in range(10):

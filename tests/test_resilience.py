@@ -1,0 +1,324 @@
+"""Resilient serving: bounded admission + overload policies, per-request
+deadlines with true cancellation, the pressure-driven degradation ladder
+(hysteresis, reversibility), the stuck-step watchdog, and the health
+probe. Host-level pieces are property-tested (real hypothesis when
+installed, else the conftest seeded-sweep stub); the server-level paths
+run against the olmo-1b smoke model on CPU."""
+import random
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.serving import (
+    PagedConfig, QueueFull, ResilienceConfig, Server, ServerWedged)
+from repro.serving.resilience import (
+    DegradationLadder, LADDER_ACTIONS, deadline_expired, pressure_signals,
+    ttft_missed)
+from repro.serving.scheduler import Request, Scheduler
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_bad_policy_and_ladder():
+    with pytest.raises(ValueError):
+        ResilienceConfig(overload_policy="drop-newest")
+    with pytest.raises(ValueError):
+        ResilienceConfig(ladder_enter=(0.9, 0.8, 0.95))
+
+
+def test_config_json_roundtrip():
+    cfg = ResilienceConfig(max_queue=8, overload_policy="priority",
+                           ttft_deadline_s=0.5, deadline_s=2.0,
+                           watchdog_s=10.0)
+    assert ResilienceConfig.from_json(cfg.to_json()) == cfg
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_ladder_hysteresis_and_single_step_recovery():
+    lad = DegradationLadder(ResilienceConfig())   # enter (.70,.85,.95)
+    assert lad.update(0.95) == 3                  # ascend multi-rung at once
+    assert lad.update(0.90) == 3                  # above 0.95-0.15: hold
+    assert lad.update(0.75) == 2                  # below 0.80: drop ONE rung
+    assert lad.update(0.10) == 1                  # one rung per update
+    assert lad.update(0.10) == 0
+    assert [t["action"] for t in lad.transitions] == \
+        ["shed", "window_shrink", "spec_off", "normal"]
+    # rung semantics the engine consumes
+    lad.update(0.72)
+    assert not lad.spec_allowed and lad.decode_window_cap(16) == 16
+    lad.update(0.86)
+    assert lad.decode_window_cap(16) == 2 and not lad.shed_active
+    lad.update(0.96)
+    assert lad.shed_active
+
+
+@given(seed=st.integers(0, 10_000))
+def test_ladder_invariants_random_pressure(seed):
+    rng = random.Random(seed)
+    lad = DegradationLadder(ResilienceConfig())
+    prev = lad.level
+    for step in range(60):
+        p = rng.random()
+        lvl = lad.update(p, step)
+        assert 0 <= lvl <= 3
+        # recovery is gradual; escalation may jump
+        assert lvl - prev >= -1
+        if lvl > prev:
+            assert p >= lad.enter[lvl - 1]
+        if lvl < prev:
+            assert p < lad.enter[prev - 1] - lad.exit_margin
+        prev = lvl
+    # every recorded transition is a real level change with its action
+    for t in lad.transitions:
+        assert t["from"] != t["to"]
+        assert t["action"] == LADDER_ACTIONS[t["to"]]
+
+
+# ---------------------------------------------------------------------------
+# bounded admission (scheduler level)
+# ---------------------------------------------------------------------------
+
+def _req(rid, priority=0):
+    return Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=4,
+                   arrival=float(rid), priority=priority)
+
+
+def _sched(policy, max_queue=3):
+    return Scheduler(PagedConfig.sized_for(32, 2), max_concurrency=2,
+                     max_queue=max_queue, overload_policy=policy)
+
+
+def test_reject_policy_raises_queue_full():
+    s = _sched("reject")
+    for i in range(3):
+        assert s.add(_req(i)) == []
+    with pytest.raises(QueueFull) as ei:
+        s.add(_req(3))
+    assert ei.value.rid == 3 and ei.value.max_queue == 3
+    assert [r.rid for r in s.queue] == [0, 1, 2]
+
+
+def test_shed_oldest_policy():
+    s = _sched("shed-oldest")
+    for i in range(3):
+        s.add(_req(i))
+    victims = s.add(_req(3))
+    assert [v.rid for v in victims] == [0]
+    assert [r.rid for r in s.queue] == [1, 2, 3]
+
+
+def test_priority_policy_sheds_lowest_class_only():
+    s = _sched("priority")
+    s.add(_req(0, priority=1))
+    s.add(_req(1, priority=0))
+    s.add(_req(2, priority=1))
+    # newcomer outranks rid 1 -> rid 1 shed
+    victims = s.add(_req(3, priority=2))
+    assert [v.rid for v in victims] == [1]
+    # equal-class newcomer loses (FIFO within a class)
+    with pytest.raises(QueueFull):
+        s.add(_req(4, priority=0))
+    assert [r.rid for r in s.queue] == [0, 2, 3]
+
+
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["reject", "shed-oldest", "priority"]),
+       max_queue=st.integers(1, 6))
+@settings(max_examples=30)
+def test_bounded_queue_never_exceeds_capacity(seed, policy, max_queue):
+    rng = random.Random(seed)
+    s = _sched(policy, max_queue=max_queue)
+    admitted, out = 0, 0
+    for rid in range(40):
+        try:
+            out += len(s.add(_req(rid, priority=rng.randrange(3))))
+            admitted += 1
+        except QueueFull:
+            pass
+        assert s.queue_depth <= max_queue
+    # conservation: everything admitted is still queued or was shed
+    assert admitted == s.queue_depth + out
+
+
+# ---------------------------------------------------------------------------
+# deadlines (host-level predicates)
+# ---------------------------------------------------------------------------
+
+def test_deadline_predicates():
+    r = Request(rid=0, prompt=[1], max_new_tokens=4, arrival=100.0,
+                ttft_deadline_s=0.5, deadline_s=2.0)
+    assert deadline_expired(r, 100.3) is None
+    r.ttft = 0.3                    # first token in time; total governs
+    assert deadline_expired(r, 101.0) is None
+    assert deadline_expired(r, 103.0) == "timeout"      # total blown
+    r2 = Request(rid=1, prompt=[1], max_new_tokens=4, arrival=100.0,
+                 ttft_deadline_s=0.5)
+    assert deadline_expired(r2, 100.9) == "timeout"     # no first token yet
+    r2.ttft = 0.4
+    assert deadline_expired(r2, 100.9) is None
+    assert not ttft_missed(r2)
+    r2.ttft = 0.7
+    assert ttft_missed(r2)
+    # zero = disabled
+    r3 = Request(rid=2, prompt=[1], max_new_tokens=4, arrival=0.0)
+    assert deadline_expired(r3, 1e9) is None
+
+
+def test_pressure_signals_bounds():
+    s = _sched("reject", max_queue=4)
+    for i in range(4):
+        s.add(_req(i))
+    sig = pressure_signals(s, max_queue=4, max_concurrency=2)
+    assert sig["queue"] == 1.0 and sig["pressure"] == 1.0
+    assert 0.0 <= sig["pool"] <= 1.0
+    # plenty of free blocks: queued work is waiting on slots, not pool
+    assert sig["starved"] is False
+
+
+def test_pool_pressure_requires_admission_starvation():
+    """A fully-utilized pool is healthy; only a pool that blocks
+    admission (free slot + queued request it cannot cover) counts as
+    pressure. Without this gate the ladder strips speculation from any
+    dense batch sized to its pool (see
+    test_server_spec_fallback_and_block_accounting)."""
+    s = _sched("reject", max_queue=8)
+    # drain the pool: utilization 1.0 with an EMPTY queue -> no pressure
+    n = s.alloc.n_blocks
+    held = s.alloc.alloc(n)
+    sig = pressure_signals(s, max_queue=8, max_concurrency=2)
+    assert sig["pool"] == 1.0
+    assert sig["starved"] is False and sig["pressure"] == 0.0
+    # now a queued request faces a free slot it cannot be admitted to
+    s.add(_req(0))
+    sig = pressure_signals(s, max_queue=8, max_concurrency=2)
+    assert sig["starved"] is True
+    assert sig["pressure"] == 1.0
+    # blocks return: starvation clears even with the queue non-empty
+    s.alloc.free(held)
+    sig = pressure_signals(s, max_queue=8, max_concurrency=2)
+    assert sig["starved"] is False
+    assert sig["pressure"] == pytest.approx(1 / 8)
+
+
+# ---------------------------------------------------------------------------
+# server-level: the smoke model under resilience configs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = get_smoke("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts(olmo):
+    cfg, _ = olmo
+    rng = np.random.RandomState(0)
+    return [rng.randint(0, cfg.vocab_size, size=n).tolist()
+            for n in (5, 9, 13, 7, 11)]
+
+
+def _server(olmo, res, C=2, n_blocks_for=64, **kw):
+    cfg, params = olmo
+    pc = PagedConfig.sized_for(n_blocks_for, C)
+    return Server(params, cfg, pc, max_concurrency=C, resilience=res,
+                  **kw), pc
+
+
+def test_rejected_requests_get_terminal_status(olmo, prompts):
+    srv, pc = _server(olmo, ResilienceConfig(max_queue=2))
+    rids = [srv.submit(p, max_new_tokens=4) for p in prompts]
+    res = srv.drain()
+    reasons = [res[r].finish_reason for r in rids]
+    assert reasons.count("rejected") == 3
+    assert all(r in ("eos", "length") for r in reasons[:2])
+    assert srv.stats()["failed"]["rejected"] == 3
+    # every submit got a rid and a terminal record
+    assert set(rids) <= set(res)
+    assert srv.scheduler.alloc.n_free == pc.n_blocks
+
+
+def test_deadline_timeout_frees_pool(olmo, prompts):
+    srv, pc = _server(olmo, ResilienceConfig())
+    late = srv.submit(prompts[0], max_new_tokens=4,
+                      arrival=time.perf_counter() - 10.0, deadline_s=1.0)
+    ok = srv.submit(prompts[1], max_new_tokens=4)
+    res = srv.drain()
+    assert res[late].finish_reason == "timeout"
+    assert res[late].out_tokens == []
+    assert res[ok].finish_reason in ("eos", "length")
+    assert srv.stats()["failed"]["timeout"] == 1
+    assert srv.scheduler.alloc.n_free == pc.n_blocks
+
+
+def test_cancel_running_and_queued(olmo, prompts):
+    srv, pc = _server(olmo, ResilienceConfig(), C=1)
+    r0 = srv.submit(prompts[0], max_new_tokens=16)
+    r1 = srv.submit(prompts[1], max_new_tokens=16)
+    srv.step()                      # r0 prefilled + running, r1 queued
+    assert srv.cancel(r0) and srv.cancel(r1)
+    assert srv.finished[r0].finish_reason == "cancelled"
+    assert srv.finished[r1].finish_reason == "cancelled"
+    assert not srv.cancel(r0)       # already finished
+    assert not srv.cancel(999)      # unknown
+    assert srv.scheduler.alloc.n_free == pc.n_blocks
+    assert not srv.scheduler.alloc._ref
+
+
+def test_watchdog_raises_server_wedged(olmo, prompts):
+    from repro.testing import ChaosEngine, FaultPlan, FaultSpec
+    plan = FaultPlan([FaultSpec("latency_spike", start_step=1,
+                                magnitude=0.05)], seed=0)
+    srv, _pc = _server(olmo, ResilienceConfig(watchdog_s=0.02),
+                       chaos=ChaosEngine(plan))
+    srv.submit(prompts[0], max_new_tokens=4)
+    with pytest.raises(ServerWedged) as ei:
+        for _ in range(50):
+            srv.step()
+    snap = ei.value.snapshot
+    assert snap["duration_s"] > snap["watchdog_s"]
+    assert {"step", "kind", "queue_depth", "pool_blocks_free",
+            "degradation_level"} <= set(snap)
+
+
+def test_health_probe(olmo, prompts):
+    srv, pc = _server(olmo, ResilienceConfig(max_queue=2))
+    h = srv.health()
+    assert h["live"] and h["ready"] and h["reasons"] == []
+    assert h["pool_blocks_total"] == pc.n_blocks
+    for p in prompts[:2]:
+        srv.submit(p, max_new_tokens=4)
+    h = srv.health()
+    assert h["live"] and not h["ready"]       # admission queue full
+    assert any("queue" in r for r in h["reasons"])
+    srv.drain()
+    assert srv.health()["ready"]
+
+
+def test_shed_oldest_under_overload_counts_in_slo(olmo, prompts):
+    from repro.obs.slo import SLOSpec, evaluate
+    srv, _pc = _server(olmo, ResilienceConfig(
+        max_queue=2, overload_policy="shed-oldest", deadline_s=30.0))
+    rids = [srv.submit(p, max_new_tokens=4) for p in prompts]
+    res = srv.drain()
+    shed = [r for r in rids if res[r].finish_reason == "shed"]
+    assert shed                                 # overload actually shed
+    ev = evaluate(res.values(), SLOSpec(ttft_s=10.0, tpot_s=10.0),
+                  elapsed_s=1.0)
+    assert ev.n_requests == len(prompts)        # denominator kept
+    assert ev.n_failed >= len(shed)
+    assert ev.attainment < 1.0

@@ -146,6 +146,66 @@ def test_slo_monitor_observe_request():
     assert mon.n_requests == 1
 
 
+def _failed(rid, reason, n_tokens=0, ttft=None):
+    r = _req(rid, 0.0, ttft, n_tokens, None)
+    r.finish_reason = reason
+    return r
+
+
+def test_evaluate_counts_failures_in_denominator():
+    """Shed / rejected / timed-out / cancelled requests stay in the
+    attainment denominator — load shedding can only shrink the
+    numerator, never flatter the ratio."""
+    spec = SLOSpec(ttft_s=1.0, tpot_s=1.0, attainment=0.9)
+    reqs = [
+        _req(0, 0.0, 0.5, 10, 1.4),             # meets, 10 tokens
+        _req(1, 0.0, 0.5, 10, 1.4),             # meets, 10 tokens
+        _failed(2, "shed"),
+        _failed(3, "rejected"),
+        # timed out mid-decode: HAS a recorded ttft and partial tokens,
+        # still a failure — the status check must come first
+        _failed(4, "timeout", n_tokens=3, ttft=0.2),
+        _failed(5, "cancelled"),
+    ]
+    rep = evaluate(reqs, spec, elapsed_s=10.0)
+    assert rep.n_requests == 6                   # all six in denominator
+    assert rep.n_meeting == 2
+    assert rep.n_failed == 4
+    assert rep.failures == {"shed": 1, "rejected": 1, "timeout": 1,
+                            "cancelled": 1}
+    assert rep.attainment == pytest.approx(2 / 6)
+    assert rep.met is False
+    # partial tokens of the timed-out request count toward throughput
+    # (they were generated) but never toward goodput
+    assert rep.tokens_total == 23
+    assert rep.tokens_meeting == 20
+    assert rep.throughput_tok_s == pytest.approx(2.3)
+    assert rep.goodput_tok_s == pytest.approx(2.0)
+    # latency percentiles exclude failures (censored, not zero)
+    assert rep.ttft_p99_s == pytest.approx(0.5)
+
+
+def test_monitor_counts_failures_and_goodput_under_shedding():
+    spec = SLOSpec(ttft_s=1.0, tpot_s=1.0, attainment=0.8)
+    mon = SLOMonitor(spec, window=8)
+    for _ in range(3):
+        mon.observe(0.1, 0.1, n_tokens=4)
+    assert mon.observe_request(_failed(0, "shed")) is False
+    assert mon.observe_failure("timeout", n_tokens=2) is False
+    r = mon.report(elapsed_s=2.0)
+    assert r["n_requests"] == 5
+    assert r["n_failed"] == 2
+    assert r["failures"] == {"shed": 1, "timeout": 1}
+    assert r["attainment"] == pytest.approx(3 / 5)
+    assert r["attainment_window"] == pytest.approx(3 / 5)
+    # goodput-under-shedding: only SLO-meeting tokens over wall time
+    assert r["tokens_total"] == 14 and r["tokens_meeting"] == 12
+    assert r["throughput_tok_s"] == pytest.approx(7.0)
+    assert r["goodput_tok_s"] == pytest.approx(6.0)
+    # no latency sample for failures: percentiles reflect successes only
+    assert r["ttft_p99_s"] == pytest.approx(0.1)
+
+
 def test_decompose_from_tracer_durations():
     tracer = types.SimpleNamespace(durations=lambda: {
         "queued": 2.0, "restore": 1.0, "prefill": 3.0,
